@@ -1,0 +1,46 @@
+"""Paper Table 2 / Fig. 1: arithmetic intensity of attention variants.
+
+AI = FLOPS / KV-bytes:  N1*S1 for MHA/GQA,  N1*S1*(Dk+Dv)/Dk for MLA
+(paper §2.4), with the v5e roofline knee for context.
+"""
+
+from __future__ import annotations
+
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+
+def intensity(n1, n2, s1, dk, dv, mla):
+    """AI = FLOPS / KV-bytes.  FLOPS = 2*N1*S1*S2*(Dk+Dv); bytes:
+    2*N2*S2*(Dk+Dv) for MHA/GQA (per-head KV), 2*S2*Dk for MLA (shared
+    latent) — giving N1*S1/N2 and N1*S1*(Dk+Dv)/Dk (paper Table 2)."""
+    if mla:
+        return n1 * s1 * (dk + dv) / dk
+    return n1 * s1 / n2
+
+
+VARIANTS = [
+    # name, q_heads, kv_heads, s_q, mla?
+    ("MHA", 64, 64, 1, False),
+    ("GQA", 64, 8, 1, False),
+    ("MLA-64", 64, 1, 1, True),
+    ("MLA-128", 128, 1, 1, True),
+    ("MLA-128(Sq=2)", 128, 1, 2, True),
+]
+
+
+def run(csv_out=print):
+    knee = PEAK_FLOPS / HBM_BW
+    csv_out("variant,q_heads,kv_heads,s_q,intensity_flops_per_byte,regime")
+    rows = []
+    for name, n1, n2, sq, mla in VARIANTS:
+        ai = intensity(n1, n2, sq, 576, 512, mla)
+        regime = "compute-bound" if ai > knee else "memory-bound"
+        csv_out(f"{name},{n1},{n2},{sq},{ai:.1f},{regime}")
+        rows.append((name, ai, regime))
+    csv_out(f"# v5e roofline knee = {knee:.1f} FLOP/byte "
+            f"(197 TFLOP/s over 819 GB/s)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

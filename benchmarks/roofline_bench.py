@@ -1,0 +1,57 @@
+"""Aggregate the dry-run JSON records into the §Roofline table.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and prints
+the per-(arch x shape x mesh) three-term roofline with dominant bottleneck,
+useful-compute ratio, and a what-would-move-it hint.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DEFAULT_DIR = os.path.join("experiments", "dryrun")
+
+
+def hint(rec) -> str:
+    r = rec["roofline"]
+    dom = r["dominant"]
+    if dom == "collective":
+        kinds = rec.get("collectives", {}).get("bytes", {})
+        if kinds:
+            worst = max(kinds, key=kinds.get)
+            return f"cut {worst} traffic (sharding/accum schedule)"
+        return "cut collective traffic"
+    if dom == "memory":
+        return "fuse elementwise chains / widen per-chip tile"
+    return "increase per-chip arithmetic intensity (larger microbatch)"
+
+
+def run(csv_out=print, dryrun_dir: str = DEFAULT_DIR):
+    files = sorted(glob.glob(os.path.join(dryrun_dir, "*.json")))
+    if not files:
+        csv_out(f"# no dry-run records in {dryrun_dir} "
+                "(run: python -m repro.launch.dryrun)")
+        return []
+    csv_out(
+        "arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+        "bound_ms,flops_per_dev,useful_ratio,roofline_fraction,hint"
+    )
+    rows = []
+    for f in files:
+        rec = json.load(open(f))
+        r = rec["roofline"]
+        csv_out(
+            f"{rec['arch']},{rec['shape']},{rec['mesh']},"
+            f"{r['compute_s']:.4f},{r['memory_s']:.4f},{r['collective_s']:.4f},"
+            f"{r['dominant']},{r['bound_time_s'] * 1e3:.2f},"
+            f"{r['flops_per_device']:.3e},{r['useful_ratio']:.3f},"
+            f"{r['roofline_fraction']:.4f},{hint(rec)}"
+        )
+        rows.append(rec)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Benchmark harness: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip accuracy]
+
+Sections:
+  [T2]  arithmetic intensity (paper Table 2 / Fig. 1)
+  [T3/T4] accuracy vs golden (paper Tables 3-4) + compensation ablations
+  [T5]  kernel FLOPS-utilisation model (paper Table 5 / Fig. 10)
+  [ROOFLINE] per-(arch x shape x mesh) dry-run roofline table (assignment)
+
+Each section prints CSV (``name,value,...``) so downstream tooling can diff.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def section(name):
+    print(f"\n===== [{name}] =====", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip", nargs="*", default=[],
+                    choices=["accuracy", "intensity", "kernel", "roofline"])
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    if "intensity" not in args.skip:
+        from benchmarks import arithmetic_intensity
+
+        section("T2 arithmetic intensity")
+        arithmetic_intensity.run()
+
+    if "kernel" not in args.skip:
+        from benchmarks import kernel_bench
+
+        section("T5 kernel FU model")
+        kernel_bench.run()
+
+    if "accuracy" not in args.skip:
+        from benchmarks import accuracy
+
+        section("T3/T4 accuracy vs golden")
+        accuracy.run()
+
+    if "roofline" not in args.skip:
+        from benchmarks import roofline_bench
+
+        section("ROOFLINE (from dry-run)")
+        roofline_bench.run(dryrun_dir=args.dryrun_dir)
+
+    print(f"\nbenchmarks done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Long-context sequence-parallel decode: split-KV attention with the
+AMLA per-shard kernel math and a cross-shard log-sum-exp combine — the
+long_500k serving pattern, demonstrated on a CPU mesh.
+
+    PYTHONPATH=src python examples/long_context_decode.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import seq_parallel_decode_batched
+from repro.core.attention import multi_head_attention
+
+
+def main():
+    mesh = jax.make_mesh(
+        (jax.device_count(),), ("data",),
+        axis_types=(jax.sharding.AxisType.Auto,),
+    )
+    b, g, s, d = 2, 16, 8192, 64
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, g, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+    kv_len = jnp.asarray([s, s // 2], jnp.int32)
+
+    out = seq_parallel_decode_batched(
+        q, k, v, mesh=mesh, variant="amla", scale=1 / np.sqrt(d), kv_len=kv_len
+    )
+    ref = multi_head_attention(
+        q[:, None], k[:, :, None], v[:, :, None], impl="naive",
+        scale=1 / np.sqrt(d), kv_len=kv_len,
+    )[:, 0]
+    err = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+    print(f"split-KV AMLA decode over {mesh.shape} mesh, S={s}: "
+          f"rel err vs monolithic = {err:.2e}")
+    assert err < 5e-3
+
+
+if __name__ == "__main__":
+    main()

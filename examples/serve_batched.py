@@ -1,0 +1,13 @@
+"""Batched decoding service demo: continuous-batching-lite over a smoke
+model — ragged prompt lengths, slot reuse, greedy decode.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    serve.main([
+        "--arch", "qwen2.5-3b", "--smoke", "--requests", "6",
+        "--gen-len", "12", "--batch", "3", "--max-len", "128",
+    ])

@@ -1,0 +1,85 @@
+"""End-to-end driver: train a ~100M-param MLA-attention model for a few
+hundred steps with the production substrate (AdamW + cosine, remat, grad
+accumulation, async checkpointing, deterministic data, crash recovery).
+
+    PYTHONPATH=src python examples/train_mla_100m.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import MLAConfig, get_config
+from repro.models.model_zoo import build_model
+
+
+def build_100m_config():
+    base = get_config("deepseek-v2-mla")
+    return dataclasses.replace(
+        base,
+        name="mla-100m",
+        n_layers=8,
+        d_model=512,
+        n_heads=8,
+        d_ff=1536,
+        vocab_size=8192,
+        mla=MLAConfig(d_latent=256, d_rope=32, d_nope=64, d_vhead=64),
+        head_dim=96,
+        dtype="float32",  # CPU execution
+        tie_embeddings=True,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_mla_100m")
+    args = ap.parse_args()
+
+    cfg = build_100m_config()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(int(p.size) for p in jax.tree.leaves(params))
+    print(f"model: {cfg.name}, {n/1e6:.1f}M params, "
+          f"MLA latent {cfg.mla.d_latent}+{cfg.mla.d_rope} rope")
+
+    from repro.checkpoint.checkpoint import CheckpointManager
+    from repro.data.pipeline import SyntheticLMData
+    from repro.optim.adamw import adamw_init
+    from repro.runtime.fault_tolerance import TrainingSupervisor
+    from repro.runtime.train_loop import TrainConfig, make_train_step
+    import jax.numpy as jnp
+
+    tc = TrainConfig(
+        peak_lr=1e-3, warmup_steps=20, total_steps=args.steps,
+        grad_accum=2, remat=True,
+    )
+    raw_step = jax.jit(make_train_step(model, tc), donate_argnums=(0, 1))
+    data = SyntheticLMData(
+        vocab_size=cfg.vocab_size, seq_len=256, global_batch=8, seed=0
+    )
+
+    def step_fn(state, batch, step):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        p, o, c, m = raw_step(
+            state["params"], state["opt"], None, batch, jnp.int32(step)
+        )
+        return {"params": p, "opt": o}, m
+
+    sup = TrainingSupervisor(
+        ckpt_manager=CheckpointManager(args.ckpt_dir, keep=2, async_save=True),
+        data=data,
+        ckpt_every=50,
+    )
+    state = {"params": params, "opt": adamw_init(params)}
+    state, last, history = sup.run(
+        step_fn, state, start_step=0, num_steps=args.steps
+    )
+    losses = [float(m["loss"]) for _, m in history]
+    print(f"trained to step {last}; loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: AMLA (MUL-by-ADD FlashAttention rescaling) — JAX/Pallas-TPU framework."""
+
+__version__ = "1.0.0"

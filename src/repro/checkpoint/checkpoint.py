@@ -1,0 +1,140 @@
+"""Sharded checkpointing with atomic commit, retention, async writes, resume.
+
+Layout::
+
+    <dir>/step_000100/
+        shard_00000.npz     one file per host (process_index)
+        manifest.json       leaf paths/shapes/dtypes + tree structure
+        COMMIT              empty marker written last (atomicity)
+
+Restore scans for the newest *committed* step; partially-written or
+corrupted directories are skipped (tested).  Saves can run on a background
+thread (``async_save=True``) so serialization overlaps training.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+try:  # bf16 arrays are stored as uint16 views (npz-safe)
+    import ml_dtypes
+
+    BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover
+    BF16 = None
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree, *, process_index: int = 0, block: bool = False):
+        # Materialise on host before handing to the writer thread.
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self.async_save and not block:
+            self.wait()  # one in-flight save at a time
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree, process_index), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, host_tree, process_index)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree, process_index: int):
+        names, leaves, _ = _flatten_with_names(host_tree)
+        step_dir = os.path.join(self.dir, f"step_{step:08d}")
+        tmp_dir = step_dir + ".tmp"
+        if os.path.exists(tmp_dir):
+            shutil.rmtree(tmp_dir)
+        os.makedirs(tmp_dir, exist_ok=True)
+        def npz_safe(x):
+            x = np.asarray(x)
+            if BF16 is not None and x.dtype == BF16:
+                return x.view(np.uint16)
+            return x
+
+        arrays = {f"a{i}": npz_safe(leaf) for i, leaf in enumerate(leaves)}
+        np.savez(os.path.join(tmp_dir, f"shard_{process_index:05d}.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "names": names,
+            "shapes": [list(np.shape(x)) for x in leaves],
+            "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+        }
+        with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp_dir, "COMMIT"), "w") as f:
+            f.write("ok")
+        if os.path.exists(step_dir):
+            shutil.rmtree(step_dir)
+        os.rename(tmp_dir, step_dir)  # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = self.committed_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def committed_steps(self) -> list[int]:
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            full = os.path.join(self.dir, name)
+            if (
+                name.startswith("step_")
+                and not name.endswith(".tmp")
+                and os.path.exists(os.path.join(full, "COMMIT"))
+            ):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def restore(self, step: int, like_tree, *, process_index: int = 0):
+        step_dir = os.path.join(self.dir, f"step_{step:08d}")
+        with np.load(os.path.join(step_dir, f"shard_{process_index:05d}.npz")) as z:
+            leaves = [z[f"a{i}"] for i in range(len(z.files))]
+        _, like_leaves, treedef = _flatten_with_names(like_tree)
+        assert len(leaves) == len(like_leaves), "checkpoint/tree mismatch"
+
+        def restore_leaf(a, like):
+            want = np.asarray(like).dtype
+            if BF16 is not None and want == BF16 and a.dtype == np.uint16:
+                a = a.view(BF16)
+            return jax.numpy.asarray(a, dtype=want)
+
+        return treedef.unflatten(
+            [restore_leaf(a, l) for a, l in zip(leaves, like_leaves)]
+        )
+
+    def restore_latest(self, like_tree, *, process_index: int = 0):
+        """Returns (step, tree) or (None, None) when no valid checkpoint."""
+        steps = self.committed_steps()
+        if not steps:
+            return None, None
+        step = steps[-1]
+        return step, self.restore(step, like_tree, process_index=process_index)

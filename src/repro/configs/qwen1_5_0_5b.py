@@ -1,0 +1,21 @@
+"""qwen1.5-0.5b [dense]: MHA with QKV bias.
+
+24L d_model=1024 16H (kv=16, head_dim=64) d_ff=2816 vocab=151936.
+[hf:Qwen/Qwen1.5-0.5B; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=2816,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+)

@@ -1,0 +1,14 @@
+"""The paper's contribution: Base (Alg. 1) & AMLA (Alg. 2) FlashAttention,
+bit-level numerics (Lemma 3.1 + Appendix A), the attention API, and the
+sequence-parallel (split-KV) distributed decode."""
+
+from repro.core.amla import flash_attention_amla
+from repro.core.attention import mla_attention, multi_head_attention
+from repro.core.flash import flash_attention_base
+
+__all__ = [
+    "flash_attention_amla",
+    "flash_attention_base",
+    "mla_attention",
+    "multi_head_attention",
+]

@@ -1,0 +1,163 @@
+"""AMLA (paper Algorithm 2): FlashAttention with MUL-by-ADD rescaling.
+
+The rescale factor ``exp(m_prev - m_new)`` is rounded to a power of two
+``2**(n_new - n_prev)`` (``n = round(-m/ln2)``) and applied to the FP32
+accumulator as an **INT32 addition on the exponent field** (Lemma 3.1); the
+residual ``1/r in [1/sqrt2, sqrt2]`` is folded into ``P`` during the softmax
+stage.  Because ``1/r`` must be quantised to BF16 before the ``P V`` matmul,
+Appendix A's error compensation multiplies the accumulator by
+``gamma_prev / gamma`` (``gamma = S32/S16``), folded into the same integer
+increment via ``round(1.5 * 2^23 * eps)``.
+
+NOTE (paper erratum, validated by tests/test_amla_core.py): Algorithm 2 line
+10 states ``eps = 1.5 (c_i/c_{i-1} - 1)`` while Appendix A's recurrence
+(Eq. 13, with c = r/r') requires the *reciprocal* ratio when expressed in
+terms of line 9's ``c = S32/S16``.  Deriving the exact invariant
+``Acc_i = O_i * S16_i`` gives the block multiplier
+
+    rho_i = 2^(n_i - n_{i-1}) * gamma_{i-1} / gamma_i,   gamma = S32/S16,
+
+so ``eps = gamma_{i-1}/gamma_i - 1``.  With the sign flipped the compensation
+*doubles* the quantisation error instead of cancelling it; our accuracy
+benchmark reproduces paper-level errors only with this orientation.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics
+from repro.core.flash import BlockMaskArgs, _pad_blocks, block_scores
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "scale",
+        "block_size",
+        "causal",
+        "window",
+        "softcap",
+        "matmul_dtype",
+        "error_compensation",
+        "int_add",
+        "return_residuals",
+    ),
+)
+def flash_attention_amla(
+    q: jax.Array,  # (G, Dk)
+    k: jax.Array,  # (S, Dk)
+    v: jax.Array,  # (S, Dv)
+    *,
+    scale: float,
+    block_size: int = 512,
+    q_pos: jax.Array | None = None,
+    kv_len: jax.Array | None = None,
+    causal: bool = False,
+    window: int | None = None,
+    softcap: float | None = None,
+    matmul_dtype=jnp.bfloat16,
+    error_compensation: bool = True,  # Appendix A (ablation switch)
+    int_add: bool = True,  # False => same math via exact FP32 multiplies
+    return_residuals: bool = False,
+) -> jax.Array:
+    """Algorithm 2 (AMLA).  Returns FP32 ``(G, Dv)``.
+
+    With ``return_residuals=True`` returns ``(acc, m, l)`` in *standard*
+    units (the S16 scaling divided out) so AMLA and Base shards can be
+    log-sum-exp-combined interchangeably in sequence-parallel decode.
+    """
+    s_keys = k.shape[0]
+    k = _pad_blocks(k, block_size)
+    v = _pad_blocks(v, block_size)
+    n_blocks = k.shape[0] // block_size
+    k_pos = jnp.arange(k.shape[0], dtype=jnp.int32)
+    if kv_len is None:
+        kv_len = jnp.int32(s_keys)
+    margs = BlockMaskArgs(q_pos=q_pos, kv_len=kv_len, causal=causal, window=window)
+
+    g, d_v = q.shape[0], v.shape[1]
+    n0, inv_r0 = numerics.round_scale_to_pow2(
+        jnp.full((g,), numerics.M_INIT, jnp.float32)
+    )
+    init = (
+        jnp.full((g,), numerics.M_INIT, jnp.float32),  # m
+        jnp.zeros((g,), jnp.float32),  # l
+        jnp.zeros((g, d_v), jnp.float32),  # acc  (the paper's O-tilde, in "GM")
+        n0,  # n  (int32 exponent of the rounded scale)
+        jnp.ones((g,), jnp.float32),  # gamma = S32/S16 of the previous block
+        numerics.bf16_round(inv_r0),  # s16 of the previous block (final divide)
+    )
+
+    def body(carry, i):
+        m, l, acc, n, gamma, _ = carry
+        # dynamic per-block slices (see flash.py: avoids a blocked K/V copy)
+        k_blk = jax.lax.dynamic_slice_in_dim(k, i * block_size, block_size)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, i * block_size, block_size)
+        p_blk = i * block_size + jnp.arange(block_size, dtype=jnp.int32)
+        s = block_scores(  # [C1] + start of [V1]
+            q, k_blk, scale=scale, softcap=softcap, k_pos_blk=p_blk,
+            margs=margs, matmul_dtype=matmul_dtype,
+        )
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        # l is a (G,)-vector: the exact-FP rescale here is negligible traffic.
+        l_new = l * jnp.exp(m - m_new) + jnp.sum(p, axis=-1)
+
+        # [V1] continued: power-of-two split of the scale (Alg. 2 lines 6-10).
+        n_new, inv_r32 = numerics.round_scale_to_pow2(m_new)  # S32 = 1/r
+        s16 = numerics.bf16_round(inv_r32)  # S16
+        gamma_new = inv_r32 / s16  # line 9's  c = S32/S16
+        p_scaled = (p * s16[:, None]).astype(matmul_dtype)
+
+        if error_compensation:
+            eps = gamma / gamma_new - 1.0  # see module docstring (erratum)
+        else:
+            eps = None
+
+        delta_n = n_new - n
+        if int_add:
+            # The paper's AtomicAdd<INT32> — exponent-field integer add.
+            inc = numerics.pow2_int_increment(delta_n, eps)
+            acc_scaled = numerics.apply_int_increment(acc, inc[:, None])
+        else:
+            # Ablation: identical update with exact FP32 multiplies.
+            factor = jnp.exp2(
+                jnp.maximum(delta_n.astype(jnp.float32), float(numerics.MIN_EXP_DELTA))
+            )
+            if eps is not None:
+                factor = factor * (1.0 + eps)
+            acc_scaled = acc * factor[:, None]
+
+        t = jnp.dot(  # [C2]
+            p_scaled, v_blk.astype(matmul_dtype), preferred_element_type=jnp.float32
+        )
+        acc_new = acc_scaled + t  # the paper's AtomicAdd<FP32> accumulate
+        return (m_new, l_new, acc_new, n_new, gamma_new, s16), None
+
+    (m, l, acc, n, gamma, s16), _ = jax.lax.scan(
+        body, init, jnp.arange(n_blocks, dtype=jnp.int32)
+    )
+    if return_residuals:
+        return acc / s16[:, None], m, l
+    denom = l * s16  # Alg. 2 line 20
+    safe = jnp.where(denom > 0, denom, 1.0)
+    return jnp.where(denom[:, None] > 0, acc / safe[:, None], 0.0)
+
+
+def rescale_skip_rate(m_trace: jax.Array) -> jax.Array:
+    """Fraction of KV blocks whose AMLA rescale is a no-op (delta_n == 0).
+
+    TPU-specific benefit quantified in EXPERIMENTS.md: on Ascend the win is
+    eliminating GM<->UB traffic; on TPU (VMEM-resident accumulator) the win is
+    that rounding the scale to a power of two makes most block updates skip
+    the (G x Dv) rescale entirely, because the running max rarely crosses a
+    power-of-two boundary.  ``m_trace`` is the per-block running max history
+    of shape (n_blocks, G).
+    """
+    n_trace = jnp.round(-m_trace / numerics.LN2).astype(jnp.int32)
+    changed = jnp.any(n_trace[1:] != n_trace[:-1], axis=-1)
+    return 1.0 - jnp.mean(changed.astype(jnp.float32))

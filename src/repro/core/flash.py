@@ -1,0 +1,156 @@
+"""Base FlashAttention (paper Algorithm 1) as a blockwise pure-JAX reference.
+
+This is the paper's **Base** baseline: online-softmax FlashAttention with the
+standard ``O <- O * exp(m_prev - m_new) + P V`` rescale executed as an FP32
+multiply every KV block.  Mixed precision mirrors the hardware pipeline the
+paper simulates on CPU: score/output matmuls take BF16 inputs with FP32
+accumulation, and ``P`` is cast to BF16 before the ``P V`` matmul.
+
+The function is jittable, scans over KV blocks, and is used as:
+  * the Base column of the accuracy tables (paper Tables 3-4),
+  * the XLA (non-Pallas) attention path of the model zoo,
+  * part of the oracle family for the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics
+
+
+class BlockMaskArgs(NamedTuple):
+    """Static/dynamic description of the valid (q, k) region."""
+
+    q_pos: jax.Array | None  # (G,) absolute positions of query rows, or None
+    kv_len: jax.Array | None  # scalar count of valid keys (padding mask)
+    causal: bool
+    window: int | None  # sliding-window size (keys in (q_pos - window, q_pos])
+
+
+def block_scores(
+    q: jax.Array,
+    k_blk: jax.Array,
+    *,
+    scale: float,
+    softcap: float | None,
+    k_pos_blk: jax.Array,
+    margs: BlockMaskArgs,
+    matmul_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Masked, scaled (and optionally soft-capped) scores for one KV block.
+
+    Returns an FP32 ``(G, block)`` matrix with invalid entries set to ``-inf``
+    (safe: the running max is initialised to a finite ``M_INIT``).
+    """
+    s = jnp.dot(
+        q.astype(matmul_dtype),
+        k_blk.astype(matmul_dtype).T,
+        preferred_element_type=jnp.float32,
+    )
+    s = s * jnp.float32(scale)
+    if softcap is not None:
+        s = numerics.softcap(s, softcap)
+    s = jnp.clip(s, -numerics.M_CLAMP, numerics.M_CLAMP)
+
+    mask = jnp.ones(s.shape, dtype=bool)
+    if margs.kv_len is not None:
+        mask &= k_pos_blk[None, :] < margs.kv_len
+    if margs.causal and margs.q_pos is not None:
+        mask &= k_pos_blk[None, :] <= margs.q_pos[:, None]
+    if margs.window is not None and margs.q_pos is not None:
+        mask &= k_pos_blk[None, :] > margs.q_pos[:, None] - margs.window
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def _pad_blocks(x: jax.Array, block: int) -> jax.Array:
+    s = x.shape[0]
+    pad = (-s) % block
+    if pad:
+        x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    return x
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "scale",
+        "block_size",
+        "causal",
+        "window",
+        "softcap",
+        "matmul_dtype",
+        "return_residuals",
+    ),
+)
+def flash_attention_base(
+    q: jax.Array,  # (G, Dk) query rows (a head-group; vmap for batch/heads)
+    k: jax.Array,  # (S, Dk)
+    v: jax.Array,  # (S, Dv)
+    *,
+    scale: float,
+    block_size: int = 512,
+    q_pos: jax.Array | None = None,  # (G,) absolute positions (causal/window)
+    kv_len: jax.Array | None = None,  # scalar valid-key count
+    causal: bool = False,
+    window: int | None = None,
+    softcap: float | None = None,
+    matmul_dtype=jnp.bfloat16,
+    return_residuals: bool = False,
+) -> jax.Array:
+    """Algorithm 1 (Base).  Returns FP32 ``(G, Dv)``.
+
+    With ``return_residuals=True`` returns ``(acc, m, l)`` where
+    ``acc = sum_j exp(s_j - m) v_j`` (un-normalised), for cross-shard
+    log-sum-exp combining in sequence-parallel decode.
+    """
+    s_keys = k.shape[0]
+    k = _pad_blocks(k, block_size)
+    v = _pad_blocks(v, block_size)
+    n_blocks = k.shape[0] // block_size
+    k_pos = jnp.arange(k.shape[0], dtype=jnp.int32)
+    if kv_len is None:
+        kv_len = jnp.int32(s_keys)  # mask the padding we just added
+    margs = BlockMaskArgs(q_pos=q_pos, kv_len=kv_len, causal=causal, window=window)
+
+    g, d_v = q.shape[0], v.shape[1]
+    init = (
+        jnp.full((g,), numerics.M_INIT, jnp.float32),  # m
+        jnp.zeros((g,), jnp.float32),  # l
+        jnp.zeros((g, d_v), jnp.float32),  # acc
+    )
+
+    def body(carry, i):
+        m, l, acc = carry
+        # dynamic per-block slices (NOT a pre-reshaped (n_blocks, ...) view:
+        # that materialises a full blocked copy of K/V per call)
+        k_blk = jax.lax.dynamic_slice_in_dim(k, i * block_size, block_size)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, i * block_size, block_size)
+        p_blk = i * block_size + jnp.arange(block_size, dtype=jnp.int32)
+        s = block_scores(
+            q, k_blk, scale=scale, softcap=softcap, k_pos_blk=p_blk,
+            margs=margs, matmul_dtype=matmul_dtype,
+        )
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))  # [V1]
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        t = jnp.dot(  # [C2]
+            p.astype(matmul_dtype),
+            v_blk.astype(matmul_dtype),
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * alpha[:, None] + t  # [V2] — the rescale AMLA removes
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, jnp.arange(n_blocks, dtype=jnp.int32)
+    )
+    if return_residuals:
+        return acc, m, l
+    safe_l = jnp.where(l > 0, l, 1.0)
+    return jnp.where(l[:, None] > 0, acc / safe_l[:, None], 0.0)

@@ -1,0 +1,148 @@
+"""Bit-level numerics for AMLA (paper §3, Lemma 3.1, Appendix A).
+
+Everything in this module is pure ``jnp`` so it can be used both at the XLA
+level (blockwise references, model code) and *inside* Pallas kernel bodies
+(the ops trace identically under ``interpret=True`` and on real Mosaic).
+
+The core identity (Lemma 3.1): for a normalized FP32 value ``F`` with biased
+exponent ``0 < E < 255`` and an integer ``n`` with ``-E < n < 255 - E``::
+
+    F * 2**n  ==  AS_FP32(AS_INT32(F) + n * 2**23)
+
+i.e. multiplying by a power of two is an integer addition on the exponent
+field of the IEEE-754 bit pattern.  AMLA uses this to turn the FlashAttention
+output rescale ``O *= exp(m_prev - m_new)`` into an integer add (after
+rounding the rescale factor to a power of two and folding the residual
+``1/r`` into the softmax stage).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# Number of mantissa bits in FP32; adding n * 2**23 to the bit pattern adds n
+# to the biased exponent.
+MANTISSA_BITS = 23
+EXP2_SHIFT = jnp.int32(1 << MANTISSA_BITS)
+
+LN2 = 0.6931471805599453
+
+# Running-max initialisation / clamp.  We avoid -inf so that
+# ``n = round(-m / ln2)`` always fits in int32 and ``exp(m_prev - m_new)``
+# never produces NaN (it cleanly underflows to 0.0 in FP32).
+M_INIT = -1.0e5
+M_CLAMP = 8.0e4
+
+# Paper Algorithm 2, line 11: the exponent decrement is clamped so the INT32
+# add can never underflow the exponent field for accumulator magnitudes that
+# matter (|x| >= 2^-97); values smaller than that are flushed to zero by the
+# explicit underflow guard below.
+MIN_EXP_DELTA = -30
+
+
+def as_int32(x: jax.Array) -> jax.Array:
+    """Bit-preserving reinterpretation FP32 -> INT32 (paper Eq. 7)."""
+    return lax.bitcast_convert_type(x, jnp.int32)
+
+
+def as_fp32(i: jax.Array) -> jax.Array:
+    """Bit-preserving reinterpretation INT32 -> FP32 (paper Eq. 7)."""
+    return lax.bitcast_convert_type(i, jnp.float32)
+
+
+def biased_exponent(x: jax.Array) -> jax.Array:
+    """Extract the biased 8-bit exponent field E of an FP32 array."""
+    return (as_int32(x) >> MANTISSA_BITS) & 0xFF
+
+
+def pow2_mul_by_add(x: jax.Array, n: jax.Array) -> jax.Array:
+    """Compute ``x * 2**n`` via INT32 addition on the FP32 bit pattern.
+
+    This is the paper's MUL-by-ADD primitive (Eq. 8/9).  ``n`` is an int32
+    array broadcastable against ``x`` (per-row deltas in FlashAttention).
+
+    Production guards beyond the paper's Lemma (which assumes 0 < E+n < 255):
+      * exact zeros stay exact zeros (a bit-add would create garbage),
+      * exponent-field underflow (E + n <= 0) flushes to zero — the correct
+        limit since the true product is below the normal range,
+      * overflow cannot occur in FlashAttention because the running max is
+        non-decreasing => n <= 0; we guard anyway by saturating to the FP32
+        max to keep the primitive total.
+    """
+    x = x.astype(jnp.float32)
+    n = n.astype(jnp.int32)
+    i = as_int32(x)
+    e = (i >> MANTISSA_BITS) & 0xFF
+    new_e = e + n
+    out = as_fp32(i + n * EXP2_SHIFT)
+    underflow = new_e <= 0
+    overflow = new_e >= 255
+    out = jnp.where(underflow | (x == 0.0), jnp.zeros_like(x), out)
+    big = jnp.where(x > 0, jnp.float32(3.4e38), jnp.float32(-3.4e38))
+    out = jnp.where(overflow & (x != 0.0), big, out)
+    return out
+
+
+def pow2_int_increment(delta_n: jax.Array, eps: jax.Array | None = None) -> jax.Array:
+    """INT32 increment implementing ``* 2**delta_n * (1 + eps)``.
+
+    Paper Algorithm 2 lines 11-12 (with Appendix A compensation): the
+    bit-pattern increment is ``round(2^23 * (delta_n + 1.5 * eps))`` where the
+    ``1.5`` comes from E[mantissa] ~ 2^22 (Appendix A, Eq. 15-16).
+    ``delta_n`` is clamped at MIN_EXP_DELTA like the paper.
+    """
+    d = jnp.maximum(delta_n.astype(jnp.float32), float(MIN_EXP_DELTA))
+    if eps is not None:
+        d = d + 1.5 * eps.astype(jnp.float32)
+    # DEVIATION from Algorithm 2 line 11: we drop the paper's +1e-6 bias.
+    # It (a) injects a systematic +8-ULP drift per block when the update is
+    # a no-op (delta_n == eps == 0 rounds to 8, not 0), and (b) makes the
+    # increment never exactly zero, defeating the skip-when-unchanged
+    # optimisation.  Unbiased round-half-even is strictly better on both
+    # axes (validated in benchmarks/accuracy.py).
+    return jnp.round(d * float(1 << MANTISSA_BITS)).astype(jnp.int32)
+
+
+def apply_int_increment(x: jax.Array, inc: jax.Array) -> jax.Array:
+    """Apply a precomputed INT32 exponent-field increment to FP32 ``x``.
+
+    Equivalent of the paper's ``AtomicAdd<INT32>`` on GM — on TPU the
+    accumulator is VMEM-resident so a plain (race-free) add suffices; we keep
+    the same zero/underflow guards as :func:`pow2_mul_by_add`.
+    """
+    x = x.astype(jnp.float32)
+    i = as_int32(x)
+    e = (i >> MANTISSA_BITS) & 0xFF
+    # Effective exponent delta carried by the increment (the eps-compensation
+    # part of ``inc`` is a sub-ULP mantissa adjustment, so round-to-nearest).
+    n_eff = (inc + (1 << (MANTISSA_BITS - 1))) >> MANTISSA_BITS
+    out = as_fp32(i + inc)
+    # Flush exponent-field underflow to zero.  For negative values the raw
+    # add would wrap below INT32_MIN into huge positive garbage, so this
+    # guard is mandatory, not cosmetic.
+    bad = (x == 0.0) | (e + n_eff <= 0)
+    return jnp.where(bad, jnp.zeros_like(x), out)
+
+
+def round_scale_to_pow2(m: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split ``exp(-m)`` into ``2**n * r`` with r in [1/sqrt(2), sqrt(2)].
+
+    Returns ``(n, inv_r)`` where ``n = round(-m/ln2)`` (int32) and
+    ``inv_r = 1/r = exp(n*ln2 + m)`` (the paper's ``S32``).
+    """
+    m = m.astype(jnp.float32)
+    n = jnp.round(-m / LN2).astype(jnp.int32)
+    inv_r = jnp.exp(n.astype(jnp.float32) * LN2 + m)
+    return n, inv_r
+
+
+def bf16_round(x: jax.Array) -> jax.Array:
+    """Round-trip through BF16 (the paper's ``S16`` quantisation)."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)

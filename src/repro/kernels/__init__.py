@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+mla_decode   the paper's AMLA kernel (G x 576 latent, Dv=512, KV block 512)
+gqa_decode   AMLA rescaling generalised to GQA/MQA/MHA decode
+flash_prefill causal prefill with AMLA rescale, window skip, softcap
+
+Each has ops.py jit wrappers and ref.py pure-jnp oracles; validated in
+interpret mode (tests/test_kernels.py sweeps shapes/dtypes/variants).
+"""

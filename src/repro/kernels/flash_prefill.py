@@ -1,0 +1,227 @@
+"""Pallas TPU kernel: causal flash prefill with AMLA rescaling option.
+
+Covers the prefill shapes (train_4k forward, prefill_32k) for the GQA-family
+architectures, with:
+  * causal + sliding-window whole-block skipping (upper-triangle KV blocks
+    never issue MXU work nor rescales),
+  * gemma2-style logit soft-capping,
+  * ``variant={"base","amla"}`` — Base rescales the (Bq x Dv) accumulator by
+    an FP32 multiply every KV block; AMLA applies the paper's skippable
+    INT32 exponent add.
+
+Layouts:  q: (B, Hq, Sq, Dh),  k/v: (B, Hkv, S, Dh);  GQA is handled in the
+index map (query head h reads KV head h // group), so no KV replication is
+materialised.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import numerics
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 512
+
+
+def _prefill_kernel(
+    kv_len_ref,  # (B,)
+    q_ref,  # (Bq, Dh)
+    k_ref,  # (Bk, Dh)
+    v_ref,  # (Bk, Dh)
+    o_ref,  # (Bq, Dv)
+    acc_ref,
+    m_ref,
+    l_ref,
+    n_ref,
+    gamma_ref,
+    s16_ref,
+    *,
+    scale: float,
+    variant: str,
+    block_q: int,
+    block_k: int,
+    softcap: float | None,
+    window: int | None,
+    causal: bool,
+):
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, numerics.M_INIT)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        n0, inv_r0 = numerics.round_scale_to_pow2(
+            jnp.full_like(m_ref, numerics.M_INIT)
+        )
+        n_ref[...] = n0
+        gamma_ref[...] = jnp.ones_like(gamma_ref)
+        s16_ref[...] = numerics.bf16_round(inv_r0)
+
+    k_len = kv_len_ref[b]
+    q_start = qi * block_q
+    k_start = ki * block_k
+    needed = k_start < k_len
+    if causal:
+        needed &= k_start <= q_start + block_q - 1  # block above the diagonal
+    if window is not None:
+        needed &= (k_start + block_k) > (q_start - window + 1)
+
+    @pl.when(needed)
+    def _compute():
+        s = jax.lax.dot_general(
+            q_ref[...], k_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        s = s * jnp.float32(scale)
+        if softcap is not None:
+            s = numerics.softcap(s, softcap)
+        s = jnp.clip(s, -numerics.M_CLAMP, numerics.M_CLAMP)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < k_len
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, -jnp.inf)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * jnp.exp(m_prev - m_new) + jnp.sum(
+            p, axis=1, keepdims=True
+        )
+        m_ref[...] = m_new
+
+        if variant == "amla":
+            n_new, inv_r32 = numerics.round_scale_to_pow2(m_new)
+            s16 = numerics.bf16_round(inv_r32)
+            gamma_new = inv_r32 / s16
+            eps = gamma_ref[...] / gamma_new - 1.0
+            inc = numerics.pow2_int_increment(n_new - n_ref[...], eps)
+            n_ref[...] = n_new
+            gamma_ref[...] = gamma_new
+            s16_ref[...] = s16
+            p_mm = (p * s16).astype(q_ref.dtype)
+
+            @pl.when(jnp.any(inc != 0))
+            def _rescale():
+                acc_ref[...] = numerics.apply_int_increment(acc_ref[...], inc)
+
+        else:
+            acc_ref[...] = acc_ref[...] * jnp.exp(m_prev - m_new)
+            p_mm = p.astype(q_ref.dtype)
+
+        t = jax.lax.dot_general(
+            p_mm, v_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] + t
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _finalize():
+        l = l_ref[...]
+        denom = l * s16_ref[...] if variant == "amla" else l
+        safe = jnp.where(denom > 0, denom, 1.0)
+        out = jnp.where(denom > 0, acc_ref[...] / safe, 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "variant", "scale", "block_q", "block_k", "softcap", "window",
+        "causal", "interpret",
+    ),
+)
+def flash_prefill(
+    q: jax.Array,  # (B, Hq, Sq, Dh)
+    k: jax.Array,  # (B, Hkv, S, Dh)
+    v: jax.Array,  # (B, Hkv, S, Dh)
+    kv_len: jax.Array,  # (B,)
+    *,
+    variant: str = "amla",
+    scale: float,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    softcap: float | None = None,
+    window: int | None = None,
+    causal: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, sq, dh = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, max(s, 128))
+    pad_q = (-sq) % block_q
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    pad_k = (-s) % block_k
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq = q.shape[2] // block_q
+    nk = k.shape[2] // block_k
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec(
+                (None, None, block_q, dh),
+                lambda bb, hh, qq, kk, *_: (bb, hh, qq, 0),
+            ),
+            pl.BlockSpec(
+                (None, None, block_k, dh),
+                lambda bb, hh, qq, kk, *_: (bb, hh // group, kk, 0),
+            ),
+            pl.BlockSpec(
+                (None, None, block_k, dh),
+                lambda bb, hh, qq, kk, *_: (bb, hh // group, kk, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, None, block_q, dh), lambda bb, hh, qq, kk, *_: (bb, hh, qq, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, v.shape[-1]), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.int32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _prefill_kernel,
+        scale=scale,
+        variant=variant,
+        block_q=block_q,
+        block_k=block_k,
+        softcap=softcap,
+        window=window,
+        causal=causal,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (b, hq, q.shape[2], v.shape[-1]), jnp.float32
+        ),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q, k, v)
+    return out[:, :, :sq]

@@ -1,0 +1,213 @@
+"""Pallas TPU kernel: MLA decode attention — the paper's AMLA kernel.
+
+Geometry (paper §3.1): per batch element, G = S_q * 128 query rows of width
+D_k = 576 attend to a *shared* latent KV cache ``c in (S2, 576)``; values are
+the first D_v = 512 columns of the same cache.  KV block size is 512 (paper
+§4.2).  The FP32 accumulator (G x 512) lives in VMEM scratch across the KV
+grid dimension — this is the TPU translation of the paper's "O stays in GM,
+updated by AtomicAdd": sequential grid steps make the update race-free, and
+the AMLA reformulation turns the per-block rescale into
+
+    acc <- AS_FP32(AS_INT32(acc) + [(n_i - n_{i-1}) + 1.5*eps] * 2^23)
+
+which (a) is an integer VPU op instead of transcendental+multiply and (b) is
+*skipped entirely* when the increment is zero — the common case, since the
+running max rarely crosses a power-of-two boundary.
+
+Tiling rationale (paper §4.2 adapted to v5e):  VMEM working set per program =
+Q (G*576*2B = 144 KB at G=128) + c-block (512*576*2B = 576 KB, double-
+buffered by the grid pipeline) + acc (G*512*4B = 256 KB) << 16 MB VMEM.
+Matmul dims (G=128, 512, 576=512+64) are MXU-aligned multiples of 128 except
+the 64-wide rope tail, which Mosaic pads by half a lane-tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import numerics
+
+DEFAULT_BLOCK_K = 512
+
+
+def _mla_decode_kernel(
+    # scalar prefetch
+    kv_len_ref,  # (B,) int32
+    q_pos_ref,  # (B, G) int32 absolute positions per query row
+    # inputs
+    q_ref,  # (G, Dk) bf16
+    c_ref,  # (Bk, Dk) bf16   (latent KV block; V = first d_v columns)
+    # outputs
+    o_ref,  # (G, Dv)
+    # scratch
+    acc_ref,  # (G, Dv) f32
+    m_ref,  # (G, 1) f32
+    l_ref,  # (G, 1) f32
+    n_ref,  # (G, 1) i32      } amla only (allocated regardless; cheap)
+    gamma_ref,  # (G, 1) f32  }
+    s16_ref,  # (G, 1) f32    }
+    *,
+    scale: float,
+    d_v: int,
+    variant: str,
+    block_k: int,
+    softcap: float | None,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, numerics.M_INIT)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        n0, inv_r0 = numerics.round_scale_to_pow2(
+            jnp.full_like(m_ref, numerics.M_INIT)
+        )
+        n_ref[...] = n0
+        gamma_ref[...] = jnp.ones_like(gamma_ref)
+        s16_ref[...] = numerics.bf16_round(inv_r0)
+
+    k_len = kv_len_ref[b]
+    start = i * block_k
+
+    @pl.when(start < k_len)
+    def _compute():
+        # [C1] (MXU): S = Q c^T over the full 576-wide latent+rope key.
+        s = jax.lax.dot_general(
+            q_ref[...],
+            c_ref[...],
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        s = s * jnp.float32(scale)
+        if softcap is not None:
+            s = numerics.softcap(s, softcap)
+        s = jnp.clip(s, -numerics.M_CLAMP, numerics.M_CLAMP)
+
+        k_pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        q_pos = q_pos_ref[b]  # (G,)
+        mask = (k_pos < k_len) & (k_pos <= q_pos[:, None])
+        s = jnp.where(mask, s, -jnp.inf)
+
+        # [V1] (VPU): online softmax + power-of-two scale split.
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * jnp.exp(m_prev - m_new) + jnp.sum(
+            p, axis=1, keepdims=True
+        )
+        m_ref[...] = m_new
+
+        if variant == "amla":
+            n_new, inv_r32 = numerics.round_scale_to_pow2(m_new)
+            s16 = numerics.bf16_round(inv_r32)
+            gamma_new = inv_r32 / s16
+            eps = gamma_ref[...] / gamma_new - 1.0
+            inc = numerics.pow2_int_increment(n_new - n_ref[...], eps)
+            n_ref[...] = n_new
+            gamma_ref[...] = gamma_new
+            s16_ref[...] = s16
+            p_mm = (p * s16).astype(q_ref.dtype)
+
+            # MUL-by-ADD rescale, skipped when the increment is all-zero
+            # (the [V2]-elimination at the heart of the paper).
+            @pl.when(jnp.any(inc != 0))
+            def _rescale():
+                acc_ref[...] = numerics.apply_int_increment(acc_ref[...], inc)
+
+        else:  # base: Algorithm 1's FP32-multiply rescale, every block
+            alpha = jnp.exp(m_prev - m_new)
+            acc_ref[...] = acc_ref[...] * alpha
+            p_mm = p.astype(q_ref.dtype)
+
+        # [C2] (MXU): T = P V with V = first d_v columns of the latent block.
+        t = jax.lax.dot_general(
+            p_mm,
+            c_ref[..., :d_v],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] + t
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _finalize():
+        l = l_ref[...]
+        denom = l * s16_ref[...] if variant == "amla" else l
+        safe = jnp.where(denom > 0, denom, 1.0)
+        out = jnp.where(denom > 0, acc_ref[...] / safe, 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "d_v",
+        "variant",
+        "scale",
+        "block_k",
+        "softcap",
+        "interpret",
+    ),
+)
+def mla_decode_rows(
+    q: jax.Array,  # (B, G, Dk)
+    c_kv: jax.Array,  # (B, S, Dk)
+    kv_len: jax.Array,  # (B,) int32
+    q_pos: jax.Array,  # (B, G) int32
+    *,
+    d_v: int = 512,
+    variant: str = "amla",
+    scale: float,
+    block_k: int = DEFAULT_BLOCK_K,
+    softcap: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Row-level entry point; see ops.mla_decode for the (B,Sq,H,D) API."""
+    b, g, d_k = q.shape
+    s = c_kv.shape[1]
+    block_k = min(block_k, max(s, 128))
+    pad = (-s) % block_k
+    if pad:
+        c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
+    n_blocks = c_kv.shape[1] // block_k
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_blocks),
+        in_specs=[
+            pl.BlockSpec((None, g, d_k), lambda bb, ii, *_: (bb, 0, 0)),
+            pl.BlockSpec((None, block_k, d_k), lambda bb, ii, *_: (bb, ii, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, g, d_v), lambda bb, ii, *_: (bb, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d_v), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.int32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _mla_decode_kernel,
+        scale=scale,
+        d_v=d_v,
+        variant=variant,
+        block_k=block_k,
+        softcap=softcap,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, g, d_v), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q_pos.astype(jnp.int32), q, c_kv)

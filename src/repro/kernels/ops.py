@@ -1,0 +1,127 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These adapt the framework's (B, S, H, D) tensor convention to the kernels'
+cache-native layouts, fill in default masks/positions, and expose the
+``interpret`` switch used for CPU validation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_prefill as _prefill
+from repro.kernels import gqa_decode as _gqa
+from repro.kernels import mla_decode as _mla
+
+
+def _default_pos(b, sq, kv_len, sk):
+    if kv_len is None:
+        kv_len = jnp.full((b,), sk, jnp.int32)
+    base = jnp.maximum(kv_len - sq, 0)
+    q_pos = base[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+    return kv_len.astype(jnp.int32), q_pos
+
+
+def mla_decode(
+    q: jax.Array,  # (B, Sq, Hq, Dk)
+    c_kv: jax.Array,  # (B, S, Dk)
+    *,
+    d_v: int = 512,
+    variant: str = "amla",
+    interpret: bool = False,
+    scale: float,
+    kv_len: jax.Array | None = None,
+    causal: bool = True,
+    q_offset: jax.Array | None = None,
+    block_k: int = _mla.DEFAULT_BLOCK_K,
+) -> jax.Array:
+    b, sq, hq, dk = q.shape
+    sk = c_kv.shape[1]
+    kv_len, q_pos = _default_pos(b, sq, kv_len, sk)
+    if q_offset is not None:
+        q_pos = q_offset[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+    if not causal:
+        q_pos = jnp.full((b, sq), sk, jnp.int32)  # no causal restriction
+    # rows = (Sq, Hq) flattened; every head of one token shares a position.
+    rows_pos = jnp.repeat(q_pos, hq, axis=1)  # (B, Sq*Hq)
+    q_rows = q.reshape(b, sq * hq, dk).astype(jnp.bfloat16)
+    out = _mla.mla_decode_rows(
+        q_rows,
+        c_kv.astype(jnp.bfloat16),
+        kv_len,
+        rows_pos,
+        d_v=d_v,
+        variant=variant,
+        scale=scale,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return out.reshape(b, sq, hq, d_v)
+
+
+def gqa_attention(
+    q: jax.Array,  # (B, Sq, Hq, Dh)
+    k: jax.Array,  # (B, Sk, Hkv, Dh)
+    v: jax.Array,  # (B, Sk, Hkv, Dh)
+    *,
+    variant: str = "amla",
+    interpret: bool = False,
+    causal: bool = False,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float,
+    kv_len: jax.Array | None = None,
+    q_offset: jax.Array | None = None,
+    decode_threshold: int = 8,
+) -> jax.Array:
+    """Dispatch decode-shaped calls to the decode kernel, else prefill."""
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    if sq <= decode_threshold:
+        kv_len_a, q_pos = _default_pos(b, sq, kv_len, sk)
+        if q_offset is not None:
+            q_pos = q_offset[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+        if not causal and sq > 1:
+            q_pos = jnp.full((b, sq), sk, jnp.int32)
+        # rows within a kv head: (Sq, group) — position repeats per group.
+        rows_pos = jnp.repeat(q_pos, group, axis=1)  # (B, Sq*group)
+        qr = (
+            q.reshape(b, sq, hkv, group, dh)
+            .transpose(0, 2, 1, 3, 4)
+            .reshape(b, hkv, sq * group, dh)
+        )
+        out = _gqa.gqa_decode_rows(
+            qr.astype(jnp.bfloat16),
+            k.transpose(0, 2, 1, 3).astype(jnp.bfloat16),
+            v.transpose(0, 2, 1, 3).astype(jnp.bfloat16),
+            kv_len_a,
+            rows_pos,
+            variant=variant,
+            scale=scale,
+            softcap=softcap,
+            window=window,
+            interpret=interpret,
+        )
+        out = out.reshape(b, hkv, sq, group, dh).transpose(0, 2, 1, 3, 4)
+        return out.reshape(b, sq, hq, dh).astype(q.dtype)
+
+    kv_len_a = (
+        kv_len.astype(jnp.int32)
+        if kv_len is not None
+        else jnp.full((b,), sk, jnp.int32)
+    )
+    out = _prefill.flash_prefill(
+        q.transpose(0, 2, 1, 3).astype(jnp.bfloat16),
+        k.transpose(0, 2, 1, 3).astype(jnp.bfloat16),
+        v.transpose(0, 2, 1, 3).astype(jnp.bfloat16),
+        kv_len_a,
+        variant=variant,
+        scale=scale,
+        softcap=softcap,
+        window=window,
+        causal=causal,
+        interpret=interpret,
+    )
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)

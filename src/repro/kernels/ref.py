@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each oracle computes full-softmax attention in FP32 with the same masking
+semantics as its kernel; kernel tests sweep shapes/dtypes and
+``assert_allclose`` against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _softmax_attention(s, v, mask):
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.maximum(m, -1e30)  # fully-masked rows
+    p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    safe = jnp.where(l > 0, l, 1.0)
+    return jnp.where(l > 0, (p / safe) @ v, 0.0)
+
+
+def mla_decode_ref(
+    q: jax.Array,  # (B, G, Dk)
+    c_kv: jax.Array,  # (B, S, Dk)
+    kv_len: jax.Array,  # (B,)
+    q_pos: jax.Array,  # (B, G)
+    *,
+    d_v: int = 512,
+    scale: float,
+    softcap: float | None = None,
+) -> jax.Array:
+    def one(qb, cb, klen, qp):
+        s = (qb.astype(jnp.float32) @ cb.astype(jnp.float32).T) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = jnp.arange(cb.shape[0])
+        mask = (kpos[None, :] < klen) & (kpos[None, :] <= qp[:, None])
+        return _softmax_attention(s, cb[:, :d_v].astype(jnp.float32), mask)
+
+    return jax.vmap(one)(q, c_kv, kv_len, q_pos)
+
+
+def gqa_decode_ref(
+    q: jax.Array,  # (B, Hkv, G, Dh)
+    k: jax.Array,  # (B, Hkv, S, Dh)
+    v: jax.Array,  # (B, Hkv, S, Dh)
+    kv_len: jax.Array,  # (B,)
+    q_pos: jax.Array,  # (B, G)
+    *,
+    scale: float,
+    softcap: float | None = None,
+    window: int | None = None,
+) -> jax.Array:
+    def one(qh, kh, vh, klen, qp):  # (G, Dh), (S, Dh)
+        s = (qh.astype(jnp.float32) @ kh.astype(jnp.float32).T) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = jnp.arange(kh.shape[0])
+        mask = (kpos[None, :] < klen) & (kpos[None, :] <= qp[:, None])
+        if window is not None:
+            mask &= kpos[None, :] > qp[:, None] - window
+        return _softmax_attention(s, vh.astype(jnp.float32), mask)
+
+    return jax.vmap(jax.vmap(one, in_axes=(0, 0, 0, None, None)))(
+        q, k, v, kv_len, q_pos
+    )
+
+
+def prefill_ref(
+    q: jax.Array,  # (B, Hq, Sq, Dh)
+    k: jax.Array,  # (B, Hkv, S, Dh)
+    v: jax.Array,  # (B, Hkv, S, Dh)
+    kv_len: jax.Array,  # (B,)
+    *,
+    scale: float,
+    softcap: float | None = None,
+    window: int | None = None,
+    causal: bool = True,
+) -> jax.Array:
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+
+    def one(qh, kh, vh, klen):  # (Sq, Dh), (S, Dh)
+        s = (qh.astype(jnp.float32) @ kh.astype(jnp.float32).T) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = jnp.arange(sq)[:, None]
+        kpos = jnp.arange(kh.shape[0])[None, :]
+        mask = kpos < klen
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        return _softmax_attention(s, vh.astype(jnp.float32), mask)
+
+    kg = jnp.repeat(k, group, axis=1)  # (B, Hq, S, Dh)
+    vg = jnp.repeat(v, group, axis=1)
+    return jax.vmap(jax.vmap(one, in_axes=(0, 0, 0, None)))(q, kg, vg, kv_len)

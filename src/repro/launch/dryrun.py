@@ -1,0 +1,324 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the placeholder device count before ANY other import (jax locks the
+device count on first init) — hence the first two lines below.
+
+For each cell we build ShapeDtypeStruct stand-ins (``input_specs``), jit the
+train/prefill/decode step with the production shardings, ``lower()``,
+``compile()``, and record:
+    * compiled.memory_analysis()   (fits-in-HBM evidence)
+    * compiled.cost_analysis()     (per-partition FLOPs / bytes)
+    * collective bytes parsed from the post-SPMD HLO
+    * the three roofline terms (repro.roofline.analysis)
+
+Usage:
+    python -m repro.launch.dryrun --archs assigned --shapes all --meshes both \
+        --out experiments/dryrun
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ASSIGNED,
+    BONUS,
+    LM_SHAPES,
+    get_config,
+    runnable_shapes,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.model_zoo import build_model  # noqa: E402
+from repro.optim.adamw import adamw_init  # noqa: E402
+from repro.roofline import analysis  # noqa: E402
+from repro.runtime import sharding  # noqa: E402
+from repro.runtime.serve_loop import jit_serve_fns  # noqa: E402
+from repro.runtime.train_loop import TrainConfig, jit_train_step  # noqa: E402
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+I32 = jnp.int32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _bf16_params(params_like):
+    return jax.tree.map(
+        lambda l: sds(l.shape, BF16 if jnp.issubdtype(l.dtype, jnp.floating) else l.dtype),
+        params_like,
+    )
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    specs: dict = {}
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            specs["src_embeds"] = sds((b, s // 2, cfg.d_model), BF16)
+            specs["src_len"] = sds((b,), I32)
+            specs["tokens"] = sds((b, s // 2), I32)
+            specs["labels"] = sds((b, s // 2), I32)
+        else:
+            specs["tokens"] = sds((b, s), I32)
+            specs["labels"] = sds((b, s), I32)
+            if cfg.family == "vlm":
+                specs["vision_embeds"] = sds(
+                    (b, cfg.vision_stub_tokens, cfg.d_model), BF16
+                )
+    elif shape.kind == "prefill":
+        if cfg.family == "encdec":
+            specs["src_embeds"] = sds((b, s // 2, cfg.d_model), BF16)
+            specs["tokens"] = sds((b, s // 2), I32)
+        else:
+            specs["tokens"] = sds((b, s), I32)
+            if cfg.family == "vlm":
+                specs["vision_embeds"] = sds(
+                    (b, cfg.vision_stub_tokens, cfg.d_model), BF16
+                )
+    else:  # decode
+        specs["tokens"] = sds((b, shape.s_q), I32)
+        # scalar position: uniform-batch decode (single aliased cache DUS;
+        # the ragged (B,)-offset path is exercised by the serving tests)
+        specs["cache_len"] = sds((), I32)
+    return specs
+
+
+def _model_and_params(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params_like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return cfg, model, params_like
+
+
+def lower_train(arch, shape_name, mesh, multi_pod):
+    cfg, model, params_like = _model_and_params(arch)
+    specs = input_specs(arch, shape_name)
+    dp = 32 if multi_pod else 16
+    accum = max(1, min(8, specs["tokens"].shape[0] // dp))
+    tc = TrainConfig(grad_accum=accum, remat=True, n_loss_chunks=16)
+    opt_like = jax.eval_shape(adamw_init, params_like)
+    compile_for, _ = jit_train_step(
+        model, tc, mesh, params_like, multi_pod=multi_pod
+    )
+    step = compile_for(specs)
+    lowered = step.lower(params_like, opt_like, None, specs, sds((), I32))
+    return lowered
+
+
+def lower_decode(arch, shape_name, mesh, multi_pod):
+    cfg, model, params_like = _model_and_params(arch)
+    shape = LM_SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    params_like = _bf16_params(params_like)  # serving weights in bf16
+    if cfg.family == "encdec":
+        src_like = sds((b, 1024, cfg.d_model), BF16)
+        cache_like = jax.eval_shape(
+            lambda p, se: model.init_cache(p, se, s), params_like, src_like
+        )
+    else:
+        cache_like = jax.eval_shape(lambda: model.init_cache(None, b, s))
+    specs = input_specs(arch, shape_name)
+    _, compile_decode, _ = jit_serve_fns(
+        model, mesh, params_like, cache_like, multi_pod=multi_pod
+    )
+    fn = compile_decode(specs["tokens"])
+    return fn.lower(params_like, cache_like, specs["tokens"], specs["cache_len"])
+
+
+def lower_prefill(arch, shape_name, mesh, multi_pod):
+    cfg, model, params_like = _model_and_params(arch)
+    shape = LM_SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    params_like = _bf16_params(params_like)
+    specs = input_specs(arch, shape_name)
+
+    pfn = sharding.param_spec_fn(mesh, multi_pod=multi_pod)
+    cfn = sharding.cache_spec_fn(mesh, multi_pod=multi_pod)
+    bfn = sharding.batch_spec_fn(mesh, multi_pod=multi_pod)
+    param_sh = sharding.make_shardings(mesh, params_like, pfn)
+
+    if cfg.family == "encdec":
+        tgt = specs["tokens"]
+
+        def prefill_fn(params, src_embeds, tokens):
+            cache = model.init_cache(params, src_embeds, tokens.shape[1])
+            b_ = tokens.shape[0]
+            return model.decode_step(
+                params, cache, tokens, jnp.zeros((b_,), I32)
+            )
+
+        fn = jax.jit(
+            prefill_fn,
+            in_shardings=(
+                param_sh,
+                sharding.make_shardings(mesh, specs["src_embeds"], bfn),
+                sharding.make_shardings(mesh, tgt, bfn),
+            ),
+        )
+        return fn.lower(params_like, specs["src_embeds"], tgt)
+
+    cache_like = jax.eval_shape(lambda: model.init_cache(None, b, s))
+    cache_sh = sharding.make_shardings(mesh, cache_like, cfn)
+
+    if cfg.family == "vlm":
+
+        def prefill_fn(params, cache, tokens, vision_embeds):
+            from repro.models import vlm as _vlm
+            from repro.models.transformer import lm_apply, lm_logits
+
+            positions = _vlm.mrope_positions(
+                tokens.shape[0], tokens.shape[1], vision_embeds.shape[1]
+            )
+            hidden, cache, _ = lm_apply(
+                params, tokens, cfg=cfg, positions=positions,
+                cache=cache, cache_len=jnp.zeros((tokens.shape[0],), I32),
+                embeds_override=vision_embeds,
+            )
+            return lm_logits(params, hidden[:, -1:], cfg=cfg), cache
+
+        fn = jax.jit(
+            prefill_fn,
+            in_shardings=(
+                param_sh,
+                cache_sh,
+                sharding.make_shardings(mesh, specs["tokens"], bfn),
+                sharding.make_shardings(mesh, specs["vision_embeds"], bfn),
+            ),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(1,),
+        )
+        return fn.lower(
+            params_like, cache_like, specs["tokens"], specs["vision_embeds"]
+        )
+
+    compile_prefill, _, _ = jit_serve_fns(
+        model, mesh, params_like, cache_like, multi_pod=multi_pod
+    )
+    fn = compile_prefill(specs["tokens"])
+    return fn.lower(params_like, cache_like, specs["tokens"])
+
+
+LOWERERS = {"train": lower_train, "prefill": lower_prefill, "decode": lower_decode}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str | None):
+    cfg = get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    lowered = LOWERERS[shape.kind](arch, shape_name, mesh, multi_pod)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    mem_d = {
+        k: int(getattr(mem, k))
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        )
+    }
+    mf = analysis.model_flops(cfg, shape)
+    terms = analysis.roofline_from_compiled(
+        compiled, model_flops_total=mf, n_chips=n_chips
+    )
+    from repro.roofline.hlo_cost import cost_from_compiled
+
+    cost = cost_from_compiled(compiled)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": mesh_name,
+        "n_chips": n_chips,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory": mem_d,
+        "model_flops_total": mf,
+        "roofline": terms.to_dict(),
+        "collectives": {"bytes": cost.coll, "counts": cost.coll_counts},
+    }
+    print(
+        f"[OK] {arch:22s} {shape_name:12s} {mesh_name:8s} "
+        f"lower {rec['lower_s']:6.1f}s compile {rec['compile_s']:6.1f}s "
+        f"flops/dev {terms.flops_per_device:.3e} "
+        f"dominant {terms.dominant:10s} bound {terms.bound_time_s*1e3:.2f} ms "
+        f"useful {terms.useful_ratio:.2f}",
+        flush=True,
+    )
+    print("  memory_analysis:", mem, flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = f"{arch}__{shape_name}__{mesh_name}.json".replace("/", "_")
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default="assigned", help="assigned|all|csv names")
+    ap.add_argument("--shapes", default="all")
+    ap.add_argument("--meshes", default="both", choices=["both", "single", "multi"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--stop-on-error", action="store_true")
+    args = ap.parse_args()
+
+    if args.archs == "assigned":
+        archs = list(ASSIGNED)
+    elif args.archs == "all":
+        archs = list(ASSIGNED) + list(BONUS)
+    else:
+        archs = args.archs.split(",")
+
+    meshes = {"both": [False, True], "single": [False], "multi": [True]}[args.meshes]
+    ok = fail = skip = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = (
+            runnable_shapes(cfg) if args.shapes == "all" else args.shapes.split(",")
+        )
+        for shape_name in shapes:
+            if shape_name not in runnable_shapes(cfg):
+                print(f"[SKIP] {arch} {shape_name} (documented inapplicability)")
+                skip += 1
+                continue
+            for multi_pod in meshes:
+                try:
+                    run_cell(arch, shape_name, multi_pod, args.out)
+                    ok += 1
+                except Exception:
+                    fail += 1
+                    print(f"[FAIL] {arch} {shape_name} multi_pod={multi_pod}")
+                    traceback.print_exc()
+                    if args.stop_on_error:
+                        raise
+    print(f"\ndry-run complete: {ok} ok, {fail} failed, {skip} skipped")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""Perf hillclimbing driver: lower ONE (arch x shape) cell under a knob
+combination and report the roofline terms — the §Perf iteration tool.
+
+Knobs:
+    --policy   tp_fsdp | fsdp | fsdp2d | dp      parallelism layout
+    --accum    gradient accumulation factor       (train cells)
+    --remat    on | off                           (train cells)
+    --loss-chunks N                               chunked-CE chunk count
+
+Each invocation prints one CSV row; EXPERIMENTS.md §Perf logs the
+hypothesis -> change -> before -> after chain.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb \
+        --arch qwen1.5-0.5b --shape train_4k --policy fsdp2d --accum 2
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import LM_SHAPES, get_config  # noqa: E402
+from repro.launch import dryrun  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.runtime.mesh_ctx import mesh_ctx  # noqa: E402
+from repro.optim.adamw import adamw_init  # noqa: E402
+from repro.roofline import analysis  # noqa: E402
+from repro.roofline.hlo_cost import cost_from_compiled  # noqa: E402
+from repro.runtime.serve_loop import jit_serve_fns  # noqa: E402
+from repro.runtime.train_loop import TrainConfig, jit_train_step  # noqa: E402
+
+
+def lower_cell(arch, shape_name, *, multi_pod, policy, accum, remat, loss_chunks):
+    cfg = get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    specs = dryrun.input_specs(arch, shape_name)
+    return _lower_in_ctx(
+        cfg, shape, mesh, specs, arch, shape_name,
+        multi_pod=multi_pod, policy=policy, accum=accum, remat=remat,
+        loss_chunks=loss_chunks,
+    )
+
+
+def _lower_in_ctx(cfg, shape, mesh, specs, arch, shape_name,
+                  *, multi_pod, policy, accum, remat, loss_chunks):
+    with mesh_ctx(mesh, policy, multi_pod):
+        if shape.kind == "train":
+            from repro.models.model_zoo import build_model
+
+            model = build_model(cfg)
+            params_like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            tc = TrainConfig(
+                grad_accum=accum, remat=remat, n_loss_chunks=loss_chunks
+            )
+            opt_like = jax.eval_shape(adamw_init, params_like)
+            compile_for, _ = jit_train_step(
+                model, tc, mesh, params_like, multi_pod=multi_pod, policy=policy
+            )
+            return compile_for(specs).lower(
+                params_like, opt_like, None, specs, dryrun.sds((), dryrun.I32)
+            )
+        if shape.kind == "decode":
+            from repro.models.model_zoo import build_model
+
+            model = build_model(cfg)
+            params_like = dryrun._bf16_params(
+                jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            )
+            b, s = shape.global_batch, shape.seq_len
+            if cfg.family == "encdec":
+                src_like = dryrun.sds((b, 1024, cfg.d_model), dryrun.BF16)
+                cache_like = jax.eval_shape(
+                    lambda p, se: model.init_cache(p, se, s), params_like, src_like
+                )
+            else:
+                cache_like = jax.eval_shape(lambda: model.init_cache(None, b, s))
+            _, compile_decode, _ = jit_serve_fns(
+                model, mesh, params_like, cache_like,
+                multi_pod=multi_pod, policy=policy,
+            )
+            return compile_decode(specs["tokens"]).lower(
+                params_like, cache_like, specs["tokens"], specs["cache_len"]
+            )
+        # prefill reuses the dryrun lowerer (policy plumbed via serve fns
+        # only for tp_fsdp; non-default policies supported for train/decode)
+        return dryrun.lower_prefill(arch, shape_name, mesh, multi_pod)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--policy", default="tp_fsdp")
+    ap.add_argument("--accum", type=int, default=8)
+    ap.add_argument("--remat", default="on", choices=["on", "off"])
+    ap.add_argument("--loss-chunks", type=int, default=16)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=None, help="append JSON record here")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = LM_SHAPES[args.shape]
+    n_chips = 512 if args.multi_pod else 256
+    t0 = time.time()
+    lowered = lower_cell(
+        args.arch, args.shape,
+        multi_pod=args.multi_pod, policy=args.policy, accum=args.accum,
+        remat=args.remat == "on", loss_chunks=args.loss_chunks,
+    )
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    mf = analysis.model_flops(cfg, shape)
+    terms = analysis.roofline_from_compiled(
+        compiled, model_flops_total=mf, n_chips=n_chips
+    )
+    cost = cost_from_compiled(compiled)
+    mem = compiled.memory_analysis()
+    rec = {
+        "tag": args.tag,
+        "arch": args.arch,
+        "shape": args.shape,
+        "policy": args.policy,
+        "accum": args.accum,
+        "remat": args.remat,
+        "loss_chunks": args.loss_chunks,
+        "multi_pod": args.multi_pod,
+        "compile_s": round(dt, 1),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "roofline": terms.to_dict(),
+        "coll_bytes": cost.coll,
+        "coll_counts": cost.coll_counts,
+    }
+    print(
+        "tag,policy,accum,remat,chunks,compute_s,memory_s,collective_s,"
+        "dominant,bound_ms,useful,roofline_frac,temp_GB"
+    )
+    r = terms.to_dict()
+    print(
+        f"{args.tag},{args.policy},{args.accum},{args.remat},"
+        f"{args.loss_chunks},{r['compute_s']:.4f},{r['memory_s']:.4f},"
+        f"{r['collective_s']:.4f},{r['dominant']},"
+        f"{r['bound_time_s'] * 1e3:.1f},{r['useful_ratio']:.3f},"
+        f"{r['roofline_fraction']:.4f},{mem.temp_size_in_bytes / 1e9:.2f}"
+    )
+    print("coll bytes:", {k: f"{v / 1e9:.2f}GB" for k, v in cost.coll.items()})
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

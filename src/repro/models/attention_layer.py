@@ -1,0 +1,234 @@
+"""GQA/MQA/MHA attention layer with KV cache, RoPE/M-RoPE, QK-norm, windows.
+
+Used by 8 of the 10 assigned architectures.  The attention math runs through
+``repro.core.attention`` so the paper's Base/AMLA variants and the Pallas
+kernels are selectable framework-wide (``cfg.attn_variant``, ``cfg.attn_impl``).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import multi_head_attention
+from repro.models import layers
+
+
+def gqa_init(key, cfg):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], d, hq * dh, bias=cfg.qkv_bias),
+        "wk": layers.dense_init(ks[1], d, hkv * dh, bias=cfg.qkv_bias),
+        "wv": layers.dense_init(ks[2], d, hkv * dh, bias=cfg.qkv_bias),
+        "wo": layers.dense_init(ks[3], hq * dh, d, std=1.0 / math.sqrt(hq * dh)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.rmsnorm_init(dh)
+        p["k_norm"] = layers.rmsnorm_init(dh)
+    return p
+
+
+def init_kv_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    if getattr(cfg, "cache_layout", "bshd") == "bhsd":
+        shape = (batch, hkv, max_len, dh)
+    else:
+        shape = (batch, max_len, hkv, dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _update_cache(cache, k_new, v_new, cache_len, *, layout="bshd"):
+    """Insert (B, Sq, Hkv, Dh) new keys/values at offsets ``cache_len``.
+
+    Scalar ``cache_len`` (uniform-position decode, the serving fast path) is
+    a single aliased dynamic-update-slice.  Per-example offsets (ragged
+    continuous batching) need a vmapped DUS, which lowers to scatter — on
+    some backends that forces a full-cache dtype round-trip per layer, so
+    serving batches with a common position should always pass a scalar.
+    """
+    if layout == "bhsd":
+        k_new = k_new.swapaxes(1, 2)  # (B, Hkv, Sq, Dh) — tiny
+        v_new = v_new.swapaxes(1, 2)
+        if jnp.ndim(cache_len) == 0:
+            start = (0, 0, cache_len, 0)
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], k_new.astype(cache["k"].dtype), start
+            )
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], v_new.astype(cache["v"].dtype), start
+            )
+            return {"k": k, "v": v}
+
+        def upd(buf, new, idx):
+            return jax.lax.dynamic_update_slice(
+                buf, new.astype(buf.dtype), (0, idx, 0)
+            )
+
+        return {
+            "k": jax.vmap(upd)(cache["k"], k_new, cache_len),
+            "v": jax.vmap(upd)(cache["v"], v_new, cache_len),
+        }
+    if jnp.ndim(cache_len) == 0:
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, cache_len, 0, 0)
+        )
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, cache_len, 0, 0)
+        )
+        return {"k": k, "v": v}
+
+    def upd(buf, new, idx):
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), (idx, 0, 0))
+
+    k = jax.vmap(upd)(cache["k"], k_new, cache_len)
+    v = jax.vmap(upd)(cache["v"], v_new, cache_len)
+    return {"k": k, "v": v}
+
+
+def _as_batch_vec(x, b):
+    """Normalise a scalar-or-(B,) length/offset to (B,)."""
+    x = jnp.asarray(x)
+    return jnp.broadcast_to(x, (b,)) if x.ndim == 0 else x
+
+
+def gqa_apply(
+    params,
+    x: jax.Array,  # (B, S, d)
+    *,
+    cfg,
+    positions: jax.Array,  # (B, S) int or (3, B, S) for M-RoPE
+    window: int | None = None,
+    cache=None,
+    cache_len: jax.Array | None = None,  # (B,)
+    causal: bool = True,
+    dtype=jnp.bfloat16,
+):
+    """Returns (y, new_cache).  new_cache is None when cache is None."""
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = layers.dense(params["wq"], x, dtype=dtype).reshape(b, s, hq, dh)
+    k = layers.dense(params["wk"], x, dtype=dtype).reshape(b, s, hkv, dh)
+    v = layers.dense(params["wv"], x, dtype=dtype).reshape(b, s, hkv, dh)
+
+    if cfg.qk_norm:
+        q = layers.rmsnorm(params["q_norm"], q, eps=cfg.norm_eps)
+        k = layers.rmsnorm(params["k_norm"], k, eps=cfg.norm_eps)
+
+    if positions.ndim == 3:  # M-RoPE (qwen2-vl)
+        q = layers.mrope(q, positions, sections=cfg.mrope_sections, theta=cfg.rope_theta)
+        k = layers.mrope(k, positions, sections=cfg.mrope_sections, theta=cfg.rope_theta)
+    else:
+        q = layers.rope(q, positions, theta=cfg.rope_theta)
+        k = layers.rope(k, positions, theta=cfg.rope_theta)
+
+    layout = getattr(cfg, "cache_layout", "bshd")
+    if cache is not None:
+        assert cache_len is not None
+        cache = _update_cache(cache, k, v, cache_len, layout=layout)
+        k_all, v_all = cache["k"], cache["v"]
+        kv_len = _as_batch_vec(cache_len + s, b)
+        q_offset = _as_batch_vec(cache_len, b)
+    else:
+        k_all, v_all = k, v
+        kv_len = jnp.full((b,), s, jnp.int32)
+        q_offset = jnp.zeros((b,), jnp.int32)
+
+    # Split-KV decode (policy "seqkv"): cache sequence sharded over "model",
+    # reconciled by an explicit shard_map LSE combine (XLA's auto-partitioner
+    # would re-gather the whole cache otherwise — see EXPERIMENTS.md §Perf).
+    from repro.runtime import mesh_ctx as _mc
+
+    mesh = _mc.current_mesh()
+    if (
+        cache is not None
+        and mesh is not None
+        and _mc.current_policy() == "seqkv"
+        and s <= 8
+        and k_all.shape[2 if layout == "bhsd" else 1] % mesh.shape["model"] == 0
+    ):
+        from repro.core.distributed import gqa_split_kv_decode
+
+        dax = _mc.data_axes_in_ctx()
+        dp_total = 1
+        for a in dax:
+            dp_total *= mesh.shape[a]
+        bshard = k_all.shape[0] % dp_total == 0
+        attn = gqa_split_kv_decode(
+            q, k_all, v_all,
+            mesh=mesh, seq_axis="model",
+            batch_axes=dax if bshard else (),
+            variant=cfg.attn_variant,
+            scale=cfg.attn_scale or 1.0 / math.sqrt(dh),
+            kv_len=kv_len, q_offset=q_offset, window=window,
+            softcap=cfg.attn_softcap, kv_layout=layout,
+        )
+        y = layers.dense(params["wo"], attn.reshape(b, s, hq * dh), dtype=dtype)
+        return y, cache
+
+    if layout == "bhsd" and cache is not None:
+        k_all = k_all.swapaxes(1, 2)
+        v_all = v_all.swapaxes(1, 2)
+    attn = multi_head_attention(
+        q,
+        k_all,
+        v_all,
+        variant=cfg.attn_variant,
+        impl=cfg.attn_impl,
+        causal=causal,
+        window=window,
+        softcap=cfg.attn_softcap,
+        scale=cfg.attn_scale or 1.0 / math.sqrt(dh),
+        kv_len=kv_len,
+        q_offset=q_offset,
+    )
+    y = layers.dense(params["wo"], attn.reshape(b, s, hq * dh), dtype=dtype)
+    return y, cache
+
+
+def cross_attention_init(key, cfg):
+    d, hq, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": layers.dense_init(ks[0], d, hq * dh),
+        "wk": layers.dense_init(ks[1], d, hq * dh),
+        "wv": layers.dense_init(ks[2], d, hq * dh),
+        "wo": layers.dense_init(ks[3], hq * dh, d, std=1.0 / math.sqrt(hq * dh)),
+    }
+
+
+def cross_attention_apply(
+    params,
+    x: jax.Array,  # (B, St, d) decoder states
+    memory_kv=None,  # precomputed {"k","v"}: (B, Ss, H, Dh) — decode path
+    memory: jax.Array | None = None,  # (B, Ss, d) encoder output — train path
+    *,
+    cfg,
+    memory_len: jax.Array | None = None,  # (B,)
+    dtype=jnp.bfloat16,
+):
+    """Encoder-decoder cross attention (static KV -> single-pass softmax)."""
+    b, st, d = x.shape
+    hq, dh = cfg.n_heads, cfg.head_dim
+    q = layers.dense(params["wq"], x, dtype=dtype).reshape(b, st, hq, dh)
+    if memory_kv is None:
+        assert memory is not None
+        ss = memory.shape[1]
+        k = layers.dense(params["wk"], memory, dtype=dtype).reshape(b, ss, hq, dh)
+        v = layers.dense(params["wv"], memory, dtype=dtype).reshape(b, ss, hq, dh)
+        memory_kv = {"k": k, "v": v}
+    attn = multi_head_attention(
+        q,
+        memory_kv["k"],
+        memory_kv["v"],
+        variant=cfg.attn_variant,
+        impl=cfg.attn_impl,
+        causal=False,
+        scale=1.0 / math.sqrt(dh),
+        kv_len=memory_len,
+    )
+    y = layers.dense(params["wo"], attn.reshape(b, st, hq * dh), dtype=dtype)
+    return y, memory_kv

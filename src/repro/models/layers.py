@@ -1,0 +1,188 @@
+"""Shared neural-net layers (pure JAX, params are nested dicts of arrays).
+
+Initialisers return param pytrees; apply functions are pure.  All matmuls
+run in the model compute dtype (bf16 by default) with FP32 accumulation via
+``preferred_element_type``; norms/softmax stay FP32.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def truncnorm(key, shape, std, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(dim):
+    return {"scale": jnp.zeros((dim,), jnp.float32)}
+
+
+def rmsnorm(params, x, *, eps=1e-6):
+    """RMSNorm with Gemma-style (1 + scale) parameterisation (zeros-init)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"])).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / embedding
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in, d_out, *, bias=False, std=None):
+    std = std if std is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": truncnorm(key, (d_in, d_out), std)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(params, x, *, dtype=jnp.bfloat16):
+    y = jnp.dot(
+        x.astype(dtype), params["w"].astype(dtype),
+        preferred_element_type=jnp.float32,
+    )
+    if "b" in params:
+        y = y + params["b"]
+    return y.astype(dtype)
+
+
+def embed_init(key, vocab, dim):
+    return {"table": truncnorm(key, (vocab, dim), 1.0)}
+
+
+def embed(params, tokens, *, dtype=jnp.bfloat16):
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params, x, *, dtype=jnp.bfloat16, softcap=None):
+    """Project to vocab logits (optionally soft-capped, Gemma-2 style)."""
+    logits = jnp.dot(
+        x.astype(dtype), params["table"].astype(dtype).T,
+        preferred_element_type=jnp.float32,
+    )
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff),
+        "up": dense_init(k2, d_model, d_ff),
+        "down": dense_init(k3, d_ff, d_model, std=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def mlp(params, x, *, act="silu", dtype=jnp.bfloat16):
+    g = dense(params["gate"], x, dtype=dtype)
+    u = dense(params["up"], x, dtype=dtype)
+    if act == "silu":
+        g = jax.nn.silu(g.astype(jnp.float32)).astype(dtype)
+    elif act == "gelu":
+        g = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(dtype)
+    else:
+        raise ValueError(act)
+    return dense(params["down"], g * u, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0):
+    """NeoX-style RoPE.  x: (B, S, H, D), positions: (B, S) int."""
+    d = x.shape[-1]
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, d // 2, dtype=jnp.float32) / (d // 2)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope(
+    x: jax.Array,
+    positions3: jax.Array,  # (3, B, S) — temporal / height / width
+    *,
+    sections: tuple[int, int, int],
+    theta: float = 10000.0,
+):
+    """Qwen2-VL multimodal RoPE: the D/2 rotary frequencies are split into
+    ``sections`` (summing to D/2); each section rotates by a different
+    position component."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    # Per-frequency position source (section membership).
+    sel = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
+    )  # (half,)
+    pos = positions3.astype(jnp.float32)  # (3, B, S)
+    pos_per_freq = pos[sel, :, :]  # (half, B, S) via fancy index on axis 0
+    ang = jnp.moveaxis(pos_per_freq, 0, -1) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def chunked_cross_entropy(
+    unembed_params,
+    hidden: jax.Array,  # (B, S, d)
+    labels: jax.Array,  # (B, S) int, -1 = ignore
+    *,
+    n_chunks: int = 8,
+    softcap: float | None = None,
+    dtype=jnp.bfloat16,
+):
+    """Cross-entropy without materialising the full (B*S, vocab) logits.
+
+    Scans over sequence chunks; each chunk computes its logits, its LSE and
+    the label logit, then discards the logits.  This is the production trick
+    that keeps the loss memory O(B * S/n_chunks * vocab) instead of
+    O(B * S * vocab) — decisive for 256k vocabularies at 1M tokens/batch.
+    """
+    b, s, d = hidden.shape
+    assert s % n_chunks == 0, (s, n_chunks)
+    hs = hidden.reshape(b, n_chunks, s // n_chunks, d).swapaxes(0, 1)
+    ls = labels.reshape(b, n_chunks, s // n_chunks).swapaxes(0, 1)
+
+    def chunk_loss(carry, xs):
+        h, lab = xs
+        logits = unembed(unembed_params, h, dtype=dtype, softcap=softcap)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab_clipped = jnp.maximum(lab, 0)
+        lab_logit = jnp.take_along_axis(
+            logits, lab_clipped[..., None], axis=-1
+        )[..., 0]
+        valid = lab >= 0
+        nll = jnp.where(valid, lse - lab_logit, 0.0)
+        total, count = carry
+        return (total + nll.sum(), count + valid.sum()), None
+
+    (total, count), _ = jax.lax.scan(
+        chunk_loss, (jnp.float32(0.0), jnp.int32(0)), (hs, ls)
+    )
+    return total / jnp.maximum(count, 1)

@@ -1,0 +1,164 @@
+"""Unified model interface over every architecture family.
+
+``build_model(cfg)`` returns an object with:
+    init(rng) -> params
+    loss(params, batch) -> (scalar, aux)        (training; chunked CE)
+    forward(params, batch) -> hidden            (B, S, d)
+    init_cache(params, batch_like, max_len)     decode caches
+    decode_step(params, cache, tokens, cache_len) -> (logits, new_cache)
+
+Batches are dicts: tokens/labels (+ vision_embeds for vlm, src_embeds for
+encdec).  All functions are jit-compatible and pure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, layers, vlm
+from repro.models.transformer import lm_apply, lm_cache_init, lm_init, lm_logits
+
+MOE_AUX_COEF = 0.01
+
+
+def _cfg_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+class LanguageModel:
+    """Decoder-only families: dense / hybrid / ssm / moe / mla / vlm."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.dtype = _cfg_dtype(cfg)
+
+    # -- parameters --------------------------------------------------------
+    def init(self, rng):
+        return lm_init(rng, self.cfg)
+
+    def _positions(self, batch, tokens, cache_len=None):
+        if self.cfg.family == "vlm":
+            nv = 0
+            if "vision_embeds" in batch and cache_len is None:
+                nv = batch["vision_embeds"].shape[1]
+            return vlm.mrope_positions(
+                tokens.shape[0], tokens.shape[1], nv, offset=cache_len
+            )
+        return None  # lm_apply defaults to arange/cache_len
+
+    # -- training ----------------------------------------------------------
+    def forward(self, params, batch, *, remat=False):
+        tokens = batch["tokens"]
+        hidden, _, aux = lm_apply(
+            params,
+            tokens,
+            cfg=self.cfg,
+            positions=self._positions(batch, tokens),
+            embeds_override=batch.get("vision_embeds"),
+            remat=remat,
+            dtype=self.dtype,
+        )
+        return hidden, aux
+
+    def loss(self, params, batch, *, remat=False, n_loss_chunks=8):
+        hidden, aux = self.forward(params, batch, remat=remat)
+        table = params.get("unembed", params["embed"])
+        s = hidden.shape[1]
+        while s % n_loss_chunks:
+            n_loss_chunks //= 2
+        ce = layers.chunked_cross_entropy(
+            table,
+            hidden,
+            batch["labels"],
+            n_chunks=max(n_loss_chunks, 1),
+            softcap=self.cfg.final_softcap,
+            dtype=self.dtype,
+        )
+        if self.cfg.n_experts:
+            ce = ce + MOE_AUX_COEF * aux
+        return ce
+
+    def logits(self, params, hidden):
+        return lm_logits(params, hidden, cfg=self.cfg, dtype=self.dtype)
+
+    # -- serving -----------------------------------------------------------
+    def init_cache(self, params, batch_size, max_len, dtype=None):
+        del params
+        return lm_cache_init(self.cfg, batch_size, max_len, dtype or self.dtype)
+
+    def prefill(self, params, cache, tokens, *, cache_len=None):
+        b = tokens.shape[0]
+        if cache_len is None:
+            cache_len = jnp.zeros((b,), jnp.int32)
+        hidden, cache, _ = lm_apply(
+            params, tokens, cfg=self.cfg,
+            positions=self._positions({}, tokens, cache_len=cache_len),
+            cache=cache, cache_len=cache_len, dtype=self.dtype,
+        )
+        logits = lm_logits(params, hidden[:, -1:], cfg=self.cfg, dtype=self.dtype)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, cache_len):
+        """tokens: (B, Sq) new tokens (Sq=1, or 2 for MTP)."""
+        hidden, cache, _ = lm_apply(
+            params, tokens, cfg=self.cfg,
+            positions=self._positions({}, tokens, cache_len=cache_len),
+            cache=cache, cache_len=cache_len, dtype=self.dtype,
+            scan_unroll=self.cfg.decode_unroll,
+        )
+        logits = lm_logits(params, hidden, cfg=self.cfg, dtype=self.dtype)
+        return logits, cache
+
+
+class EncDecModel:
+    """Encoder-decoder family (seamless-m4t)."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.dtype = _cfg_dtype(cfg)
+
+    def init(self, rng):
+        return encdec.encdec_init(rng, self.cfg)
+
+    def forward(self, params, batch, *, remat=False):
+        del remat
+        memory = encdec.encode(
+            params, batch["src_embeds"], cfg=self.cfg, dtype=self.dtype
+        )
+        hidden, _ = encdec.decode_stack(
+            params, batch["tokens"], memory, cfg=self.cfg,
+            memory_len=batch.get("src_len"), dtype=self.dtype,
+        )
+        return hidden, jnp.float32(0.0)
+
+    def loss(self, params, batch, *, remat=False, n_loss_chunks=8):
+        hidden, _ = self.forward(params, batch, remat=remat)
+        s = hidden.shape[1]
+        while s % n_loss_chunks:
+            n_loss_chunks //= 2
+        return layers.chunked_cross_entropy(
+            params["embed"], hidden, batch["labels"],
+            n_chunks=max(n_loss_chunks, 1), dtype=self.dtype,
+        )
+
+    def logits(self, params, hidden):
+        return layers.unembed(params["embed"], hidden, dtype=self.dtype)
+
+    def init_cache(self, params, src_embeds, max_len, dtype=None):
+        return encdec.encdec_cache_init(
+            params, self.cfg, src_embeds, max_len, dtype=dtype or self.dtype
+        )
+
+    def decode_step(self, params, cache, tokens, cache_len):
+        hidden, cache = encdec.decode_stack(
+            params, tokens, None, cfg=self.cfg, cache=cache,
+            cache_len=cache_len, dtype=self.dtype,
+        )
+        return layers.unembed(params["embed"], hidden, dtype=self.dtype), cache
+
+
+def build_model(cfg):
+    if cfg.family == "encdec":
+        return EncDecModel(cfg)
+    return LanguageModel(cfg)

@@ -1,0 +1,112 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block structure (Griffin §2): two parallel branches from the residual stream
+    gate  = GeLU(x W_gate)                       (B, S, d_inner)
+    main  = Conv1D_4(x W_main)  ->  RG-LRU       (B, S, d_inner)
+    y     = (gate * main) W_out                  (B, S, d)
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(x_t W_r + b_r)         recurrence gate
+    i_t = sigmoid(x_t W_i + b_i)         input gate
+    a_t = exp(c * softplus(Lambda) * (-r_t))     in (0, 1),  c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses an associative scan (O(log S) depth, matmul-free);  decode is a
+single fused elementwise step.  Attention-free => the paper's AMLA technique
+does not apply to these layers (the hybrid's *local-attention* layers use it).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+_C = 8.0  # Griffin's fixed temperature on the recurrence gate
+
+
+def rglru_block_init(key, cfg):
+    d, dl = cfg.d_model, cfg.d_inner
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = exp(-c*softplus(L)*r) starts near 0.9..0.999.
+    lam = jax.random.uniform(ks[0], (dl,), jnp.float32, 0.001, 0.1)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam) / _C))  # inverse softplus
+    return {
+        "w_gate": layers.dense_init(ks[1], d, dl),
+        "w_main": layers.dense_init(ks[2], d, dl),
+        "conv_w": layers.truncnorm(ks[3], (cfg.conv_width, dl), 1.0 / math.sqrt(cfg.conv_width)),
+        "conv_b": jnp.zeros((dl,), jnp.float32),
+        "w_r": layers.dense_init(ks[4], dl, dl, std=1.0 / math.sqrt(dl)),
+        "w_i": layers.dense_init(ks[5], dl, dl, std=1.0 / math.sqrt(dl)),
+        "lam": lam,
+        "w_out": layers.dense_init(
+            jax.random.fold_in(key, 7), dl, d, std=1.0 / math.sqrt(dl)
+        ),
+    }
+
+
+def init_rglru_cache(cfg, batch, dtype=jnp.float32):
+    dl = cfg.d_inner
+    return {
+        "h": jnp.zeros((batch, dl), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, dl), dtype),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv, width W.  x: (B, S, D), w: (W, D)."""
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, D)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(width)
+    )
+    new_state = xp[:, -(width - 1) :] if width > 1 else pad
+    return out + b.astype(x.dtype), new_state
+
+
+def _rglru_scan(a, b, h0):
+    """h_t = a_t h_{t-1} + b_t with initial h0, via associative scan."""
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+    # fold in h0:  h_t = (prod a)_t * h0 + b_s_t
+    h = a_s * h0[:, None] + b_s
+    return h
+
+
+def rglru_block_apply(params, x, *, cfg, cache=None, dtype=jnp.bfloat16):
+    """Returns (y, new_cache)."""
+    gate = layers.dense(params["w_gate"], x, dtype=dtype)
+    gate = jax.nn.gelu(gate.astype(jnp.float32), approximate=True).astype(dtype)
+
+    main = layers.dense(params["w_main"], x, dtype=dtype)
+    conv_state = cache["conv"] if cache is not None else None
+    main, new_conv = _causal_conv(main, params["conv_w"], params["conv_b"], conv_state)
+
+    # RG-LRU gates (FP32 for the recurrence).
+    mf = main.astype(jnp.float32)
+    r = jax.nn.sigmoid(layers.dense(params["w_r"], main, dtype=dtype).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.dense(params["w_i"], main, dtype=dtype).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r  # (B, S, dl)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * mf)
+
+    h0 = cache["h"] if cache is not None else jnp.zeros_like(a[:, 0])
+    h = _rglru_scan(a, b, h0)  # (B, S, dl)
+
+    y = layers.dense(params["w_out"], (h.astype(dtype) * gate), dtype=dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h[:, -1], "conv": new_conv.astype(cache["conv"].dtype)}
+    return y, new_cache

@@ -1,0 +1,194 @@
+"""Mamba-2 block via the SSD (state-space duality) chunked algorithm.
+
+The sequence is split into chunks of length Q; within a chunk the SSD
+"quadratic/matmul form" runs on the MXU, and a plain ``lax.scan`` carries the
+(heads, head_dim, state) SSM state across chunks:
+
+    intra:  Y_intra = ((C B^T) o L) X            (chunk-local, causal-masked)
+    carry:  h_next  = decay(Q) h + (B~)^T X      (per chunk)
+    inter:  Y_inter = C h_in  (decayed)
+
+This is the TPU-native translation of the paper's (GPU) SSD kernel: all the
+heavy terms are dense matmuls over MXU-aligned tiles, no per-step recurrence.
+Attention-free => AMLA is inapplicable here (DESIGN.md §Arch-applicability).
+
+Decode is the exact single-step SSM recurrence.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.recurrent import _causal_conv
+
+CHUNK = 256
+
+
+def mamba2_block_init(key, cfg):
+    d, dl, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = dl // cfg.ssm_head_dim
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * dl + 2 * ds + nh  # [z, x, B, C, dt]
+    conv_dim = dl + 2 * ds
+    return {
+        "in_proj": layers.dense_init(ks[0], d, d_in_proj),
+        "conv_w": layers.truncnorm(
+            ks[1], (cfg.conv_width, conv_dim), 1.0 / math.sqrt(cfg.conv_width)
+        ),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(
+            jax.random.uniform(ks[2], (nh,), jnp.float32, 1.0, 16.0)
+        ),
+        "dt_bias": jnp.log(
+            jnp.expm1(
+                jax.random.uniform(ks[3], (nh,), jnp.float32, 1e-3, 1e-1)
+            )
+        ),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": layers.rmsnorm_init(dl),
+        "out_proj": layers.dense_init(
+            jax.random.fold_in(key, 9), dl, d, std=1.0 / math.sqrt(dl)
+        ),
+    }
+
+
+def init_ssm_cache(cfg, batch, dtype=jnp.float32):
+    dl, ds = cfg.d_inner, cfg.ssm_state
+    nh, hd = dl // cfg.ssm_head_dim, cfg.ssm_head_dim
+    return {
+        "h": jnp.zeros((batch, nh, hd, ds), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, dl + 2 * ds), dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    dl, ds = cfg.d_inner, cfg.ssm_state
+    nh = dl // cfg.ssm_head_dim
+    z, x, b, c, dt = jnp.split(proj, [dl, 2 * dl, 2 * dl + ds, 2 * dl + 2 * ds], -1)
+    return z, x, b, c, dt  # dt: (..., nh)
+
+
+def _ssd_chunked(x, dt, a, b, c, h0):
+    """SSD chunked scan.
+
+    x: (B, S, nh, hd)   dt: (B, S, nh)   a: (nh,) (positive decay rates)
+    b, c: (B, S, ds)    h0: (B, nh, hd, ds)
+    Returns y: (B, S, nh, hd), h_final.
+    """
+    bs, s, nh, hd = x.shape
+    ds = b.shape[-1]
+    q = min(CHUNK, s)
+    assert s % q == 0, (s, q)
+    nchunk = s // q
+
+    # Per-step log-decay: la_t = -a * dt_t  (<= 0).
+    la = -(a[None, None, :] * dt)  # (B, S, nh)
+    xr = x.reshape(bs, nchunk, q, nh, hd)
+    br = b.reshape(bs, nchunk, q, ds)
+    cr = c.reshape(bs, nchunk, q, ds)
+    lar = la.reshape(bs, nchunk, q, nh)
+    dtr = dt.reshape(bs, nchunk, q, nh)
+
+    cum = jnp.cumsum(lar, axis=2)  # (B, C, Q, nh) inclusive
+    total = cum[:, :, -1]  # (B, C, nh)
+
+    # --- intra-chunk (quadratic-in-chunk matmul form) ---
+    # L[t, u] = exp(cum_t - cum_u) for u <= t  (per head)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,C,Q,Q,nh)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcqd,bcud->bcqu", cr, br)  # (B,C,Q,Q)
+    scores = cb[..., None] * l_mat  # (B,C,Q,Q,nh)
+    xdt = xr * dtr[..., None]  # discretised input
+    y_intra = jnp.einsum("bcquh,bcuhd->bcqhd", scores, xdt)
+
+    # --- chunk state & inter-chunk scan ---
+    # state contribution of chunk: sum_u exp(total - cum_u) * dt_u x_u b_u^T
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)  # (B,C,Q,nh)
+    h_chunk = jnp.einsum(
+        "bcqh,bcqhd,bcqs->bchds", decay_to_end, xdt, br
+    )  # (B,C,nh,hd,ds)
+
+    def carry_fn(h, inp):
+        h_c, tot = inp  # (B,nh,hd,ds), (B,nh)
+        h_in = h
+        h = h * jnp.exp(tot)[:, :, None, None] + h_c
+        return h, h_in
+
+    (h_final, h_ins) = jax.lax.scan(
+        carry_fn,
+        h0,
+        (jnp.moveaxis(h_chunk, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    h_ins = jnp.moveaxis(h_ins, 0, 1)  # (B,C,nh,hd,ds) state entering chunk
+
+    # inter-chunk output: y_t += C_t . (decay(0..t) h_in)
+    decay_from_start = jnp.exp(cum)  # (B,C,Q,nh)
+    y_inter = jnp.einsum(
+        "bcqs,bchds,bcqh->bcqhd", cr, h_ins, decay_from_start
+    )
+    y = (y_intra + y_inter).reshape(bs, s, nh, hd)
+    return y, h_final
+
+
+def mamba2_block_apply(params, x, *, cfg, cache=None, dtype=jnp.bfloat16):
+    """Returns (y, new_cache)."""
+    bsz, s, _ = x.shape
+    dl, ds = cfg.d_inner, cfg.ssm_state
+    nh, hd = dl // cfg.ssm_head_dim, cfg.ssm_head_dim
+
+    proj = layers.dense(params["in_proj"], x, dtype=dtype)
+    z, xin, b, c, dt = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(
+        conv_in, params["conv_w"], params["conv_b"], conv_state
+    )
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32))
+    xin, b, c = jnp.split(conv_out, [dl, dl + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,nh)
+    a = jnp.exp(params["a_log"])  # (nh,) positive
+    xh = xin.reshape(bsz, s, nh, hd)
+
+    h0 = (
+        cache["h"]
+        if cache is not None
+        else jnp.zeros((bsz, nh, hd, ds), jnp.float32)
+    )
+
+    if s == 1 and cache is not None:
+        # exact single-step recurrence (decode)
+        la = -(a[None, :] * dt[:, 0])  # (B, nh)
+        xdt = xh[:, 0] * dt[:, 0, :, None]  # (B,nh,hd)
+        h = h0 * jnp.exp(la)[:, :, None, None] + jnp.einsum(
+            "bhd,bs->bhds", xdt, b[:, 0]
+        )
+        y = jnp.einsum("bs,bhds->bhd", c[:, 0], h)[:, None]  # (B,1,nh,hd)
+        y = y.reshape(bsz, 1, nh, hd)
+        h_final = h
+    else:
+        pad = (-s) % CHUNK if s > CHUNK else 0
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+            c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        y, h_final = _ssd_chunked(xh, dt, a, b, c, h0)
+        y = y[:, :s]
+
+    y = y + xh[:, :s] * params["d_skip"][None, None, :, None]  # skip path
+    y = y.reshape(bsz, s, dl).astype(dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dtype)  # gated
+    y = layers.rmsnorm(params["norm"], y, eps=cfg.norm_eps)
+    y = layers.dense(params["out_proj"], y, dtype=dtype)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_final, "conv": new_conv.astype(cache["conv"].dtype)}
+    return y, new_cache

@@ -1,0 +1,275 @@
+"""Decoder-only LM assembly: pattern-cycled layers, scan-over-groups, caches.
+
+Layers are stacked in groups of ``len(cfg.layer_pattern)`` and scanned with
+``lax.scan`` so compile time and HLO size are independent of depth (26-60
+layer configs compile as one group body).  A non-divisible remainder (e.g.
+recurrentgemma: 26 = 8*(rec,rec,attn) + 2) runs as unscanned tail layers.
+
+Layer kinds: "global" / "local" (GQA or MLA attention), "recurrent" (RG-LRU),
+"ssm" (Mamba2).  The MLP is dense or MoE per config; Mamba2 blocks carry no
+separate MLP (pure mixer stack, d_ff = 0).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe
+from repro.models.attention_layer import gqa_apply, gqa_init, init_kv_cache
+from repro.models.mla_layer import init_latent_cache, mla_apply, mla_init
+from repro.models.recurrent import (
+    init_rglru_cache,
+    rglru_block_apply,
+    rglru_block_init,
+)
+from repro.models.ssm import init_ssm_cache, mamba2_block_apply, mamba2_block_init
+
+
+def _has_mlp(cfg, kind):
+    return kind != "ssm" and (cfg.d_ff > 0 or cfg.n_experts > 0)
+
+
+def layer_init(key, cfg, kind):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": layers.rmsnorm_init(cfg.d_model)}
+    if kind in ("global", "local"):
+        p["attn"] = mla_init(ks[0], cfg) if cfg.mla else gqa_init(ks[0], cfg)
+    elif kind == "recurrent":
+        p["rec"] = rglru_block_init(ks[0], cfg)
+    elif kind == "ssm":
+        p["ssm"] = mamba2_block_init(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if _has_mlp(cfg, kind):
+        p["ln2"] = layers.rmsnorm_init(cfg.d_model)
+        p["mlp"] = (
+            moe.moe_init(ks[1], cfg)
+            if cfg.n_experts
+            else layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff)
+        )
+    if cfg.post_norms:
+        p["post_ln1"] = layers.rmsnorm_init(cfg.d_model)
+        if _has_mlp(cfg, kind):
+            p["post_ln2"] = layers.rmsnorm_init(cfg.d_model)
+    return p
+
+
+def layer_cache_init(cfg, kind, batch, max_len, dtype=jnp.bfloat16):
+    if kind == "global":
+        if cfg.mla:
+            return init_latent_cache(cfg, batch, max_len, dtype)
+        return init_kv_cache(cfg, batch, max_len, dtype)
+    if kind == "local":
+        eff = min(max_len, cfg.window or max_len)
+        # window caches could be ring buffers; we keep linear for simplicity
+        if cfg.mla:
+            return init_latent_cache(cfg, batch, max_len, dtype)
+        return init_kv_cache(cfg, batch, max_len, dtype)
+    if kind == "recurrent":
+        return init_rglru_cache(cfg, batch)
+    if kind == "ssm":
+        return init_ssm_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def layer_apply(
+    params, x, *, cfg, kind, positions, cache=None, cache_len=None,
+    dtype=jnp.bfloat16,
+):
+    """Pre-norm residual block.  Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = layers.rmsnorm(params["ln1"], x, eps=cfg.norm_eps)
+    if kind in ("global", "local"):
+        window = cfg.window if kind == "local" else None
+        if cfg.mla:
+            y, new_cache = mla_apply(
+                params["attn"], h, cfg=cfg, positions=positions,
+                cache=cache, cache_len=cache_len, dtype=dtype,
+            )
+        else:
+            y, new_cache = gqa_apply(
+                params["attn"], h, cfg=cfg, positions=positions, window=window,
+                cache=cache, cache_len=cache_len, dtype=dtype,
+            )
+    elif kind == "recurrent":
+        y, new_cache = rglru_block_apply(
+            params["rec"], h, cfg=cfg, cache=cache, dtype=dtype
+        )
+    elif kind == "ssm":
+        y, new_cache = mamba2_block_apply(
+            params["ssm"], h, cfg=cfg, cache=cache, dtype=dtype
+        )
+    else:
+        raise ValueError(kind)
+    if cfg.post_norms:
+        y = layers.rmsnorm(params["post_ln1"], y, eps=cfg.norm_eps)
+    x = x + y
+
+    if _has_mlp(cfg, kind):
+        h = layers.rmsnorm(params["ln2"], x, eps=cfg.norm_eps)
+        if cfg.n_experts:
+            y, aux = moe.moe_apply(params["mlp"], h, cfg=cfg, dtype=dtype)
+        else:
+            y = layers.mlp(params["mlp"], h, act=cfg.act, dtype=dtype)
+        if cfg.post_norms:
+            y = layers.rmsnorm(params["post_ln2"], y, eps=cfg.norm_eps)
+        x = x + y
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init / apply
+# ---------------------------------------------------------------------------
+def _pattern_split(cfg):
+    period = len(cfg.layer_pattern)
+    return cfg.n_layers // period, cfg.n_layers % period
+
+
+def lm_init(key, cfg):
+    n_groups, rem = _pattern_split(cfg)
+    keys = jax.random.split(key, 3)
+    params: dict[str, Any] = {
+        "embed": layers.embed_init(keys[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": layers.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = layers.embed_init(keys[2], cfg.vocab_size, cfg.d_model)
+
+    def group_init(gkey):
+        gp = {}
+        for j, kind in enumerate(cfg.layer_pattern):
+            gp[f"pos{j}"] = layer_init(jax.random.fold_in(gkey, j), cfg, kind)
+        return gp
+
+    gkeys = jax.random.split(keys[1], max(n_groups, 1))
+    if n_groups:
+        params["groups"] = jax.vmap(group_init)(gkeys)
+    params["rem"] = [
+        layer_init(
+            jax.random.fold_in(keys[1], 10_000 + j),
+            cfg,
+            cfg.layer_pattern[j % len(cfg.layer_pattern)],
+        )
+        for j in range(rem)
+    ]
+    return params
+
+
+def lm_cache_init(cfg, batch, max_len, dtype=jnp.bfloat16):
+    n_groups, rem = _pattern_split(cfg)
+
+    def one_group(_):
+        return {
+            f"pos{j}": layer_cache_init(cfg, kind, batch, max_len, dtype)
+            for j, kind in enumerate(cfg.layer_pattern)
+        }
+
+    cache: dict[str, Any] = {}
+    if n_groups:
+        # Stack per-group caches on a leading axis (mirrors params["groups"]).
+        proto = one_group(None)
+        cache["groups"] = jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf, (n_groups,) + leaf.shape).copy(),
+            proto,
+        )
+    cache["rem"] = [
+        layer_cache_init(
+            cfg, cfg.layer_pattern[j % len(cfg.layer_pattern)], batch, max_len, dtype
+        )
+        for j in range(rem)
+    ]
+    return cache
+
+
+def lm_apply(
+    params,
+    tokens: jax.Array,  # (B, S) int32
+    *,
+    cfg,
+    positions: jax.Array | None = None,  # (B,S) or (3,B,S); default arange
+    cache=None,
+    cache_len: jax.Array | None = None,  # (B,)
+    embeds_override: jax.Array | None = None,  # (B, S_vis, d) vision stub
+    remat: bool = False,
+    scan_unroll: bool | int = False,  # unroll layer groups (decode fast path)
+    dtype=jnp.bfloat16,
+):
+    """Returns (hidden (B,S,d), new_cache, aux_loss).  Unembedding is the
+    caller's job (chunked CE for training, unembed() for serving)."""
+    b, s = tokens.shape
+    n_groups, rem = _pattern_split(cfg)
+    x = layers.embed(params["embed"], tokens, dtype=dtype)
+    if embeds_override is not None:
+        nv = embeds_override.shape[1]
+        x = jnp.concatenate([embeds_override.astype(dtype), x[:, nv:]], axis=1)
+    if getattr(cfg, "embed_scale", False):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    if positions is None:
+        base = cache_len if cache_len is not None else jnp.zeros((b,), jnp.int32)
+        base = jnp.broadcast_to(jnp.asarray(base), (b,))  # scalar-safe
+        positions = base[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+
+    aux_total = jnp.float32(0.0)
+
+    def group_body(carry, xs):
+        x, aux = carry
+        gparams = xs[0]
+        gcache = xs[1] if cache is not None else None
+        new_gcache = {}
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, nc, a = layer_apply(
+                gparams[f"pos{j}"],
+                x,
+                cfg=cfg,
+                kind=kind,
+                positions=positions,
+                cache=(gcache[f"pos{j}"] if gcache is not None else None),
+                cache_len=cache_len,
+                dtype=dtype,
+            )
+            new_gcache[f"pos{j}"] = nc
+            aux = aux + a
+        if cache is None:
+            return (x, aux), None
+        return (x, aux), new_gcache
+
+    body = jax.checkpoint(group_body) if remat else group_body
+
+    new_cache: dict[str, Any] = {"rem": []}
+    if n_groups:
+        xs = (
+            (params["groups"], cache["groups"])
+            if cache is not None
+            else (params["groups"],)
+        )
+        (x, aux_total), group_caches = jax.lax.scan(
+            body, (x, aux_total), xs, unroll=scan_unroll
+        )
+        if cache is not None:
+            new_cache["groups"] = group_caches
+    for j in range(rem):
+        kind = cfg.layer_pattern[j % len(cfg.layer_pattern)]
+        x, nc, a = layer_apply(
+            params["rem"][j],
+            x,
+            cfg=cfg,
+            kind=kind,
+            positions=positions,
+            cache=(cache["rem"][j] if cache is not None else None),
+            cache_len=cache_len,
+            dtype=dtype,
+        )
+        new_cache["rem"].append(nc)
+        aux_total = aux_total + a
+
+    x = layers.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    return x, (new_cache if cache is not None else None), aux_total
+
+
+def lm_logits(params, hidden, *, cfg, dtype=jnp.bfloat16):
+    table = params.get("unembed", params["embed"])
+    return layers.unembed(table, hidden, dtype=dtype, softcap=cfg.final_softcap)

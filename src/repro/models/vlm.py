@@ -1,0 +1,56 @@
+"""Qwen2-VL backbone (assignment: modality frontend is a stub).
+
+``input_specs()`` supplies precomputed patch embeddings (B, Nv, d) occupying
+the first Nv positions of the sequence; the backbone is a standard GQA
+decoder with **M-RoPE**: rotary frequencies split into (temporal, height,
+width) sections, each rotated by its own position component.  Text tokens
+get equal (t, h, w) positions continuing after the image grid, as in the
+paper (arXiv:2409.12191).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mrope_positions(
+    batch: int,
+    seq_len: int,
+    n_vision: int,
+    *,
+    grid_hw: tuple[int, int] | None = None,
+    offset: jax.Array | None = None,  # (B,) decode offset
+) -> jax.Array:
+    """Build (3, B, S) M-RoPE position ids.
+
+    Vision tokens [0, n_vision) use (t=0, h=row, w=col) over an (H, W) grid;
+    text tokens continue with t = h = w = n_after_vision + i.
+    """
+    if n_vision:
+        if grid_hw is None:
+            side = max(int(n_vision**0.5), 1)
+            grid_hw = (side, (n_vision + side - 1) // side)
+        gh, gw = grid_hw
+        idx = jnp.arange(n_vision)
+        vis_t = jnp.zeros((n_vision,), jnp.int32)
+        vis_h = (idx // gw).astype(jnp.int32)
+        vis_w = (idx % gw).astype(jnp.int32)
+        text_start = int(max(gh, gw))
+    else:
+        vis_t = vis_h = vis_w = jnp.zeros((0,), jnp.int32)
+        text_start = 0
+    n_text = seq_len - n_vision
+    text = text_start + jnp.arange(n_text, dtype=jnp.int32)
+    pos = jnp.stack(
+        [
+            jnp.concatenate([vis_t, text]),
+            jnp.concatenate([vis_h, text]),
+            jnp.concatenate([vis_w, text]),
+        ]
+    )  # (3, S)
+    pos = jnp.broadcast_to(pos[:, None, :], (3, batch, seq_len))
+    if offset is not None:
+        off = jnp.broadcast_to(jnp.asarray(offset), (batch,))
+        pos = pos + off[None, :, None]
+    return pos

@@ -1,0 +1,99 @@
+"""AdamW + schedules + global-norm clipping (self-contained, optax-free)."""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array  # scalar int32
+    mu: dict
+    nu: dict
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(
+        count=jnp.zeros((), jnp.int32),
+        mu=zeros,
+        nu=jax.tree.map(jnp.copy, zeros),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def _is_decayable(path_leaf):
+    """Weight decay only on >=2-D weights (not norms/biases), per convention."""
+    return path_leaf.ndim >= 2
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr: jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float | None = 1.0,
+):
+    """Returns (new_params, new_state, metrics)."""
+    if clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    count = state.count + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        step = mhat / (jnp.sqrt(vhat) + eps)
+        if _is_decayable(p):
+            step = step + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(count=count, mu=new_m, nu=new_v), metrics
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+def cosine_schedule(step, *, peak_lr, warmup_steps, total_steps, min_ratio=0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip(
+        (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(math.pi * prog)))
+    return jnp.where(step < warmup_steps, warm, cos)

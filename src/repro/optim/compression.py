@@ -1,0 +1,68 @@
+"""Gradient compression with error feedback.
+
+At 1000+ node scale the DP gradient all-reduce dominates step time for small
+models; compressing the reduced tensors halves (bf16) or quarters (int8) the
+wire bytes.  Because jit+GSPMD inserts the all-reduce implicitly, we express
+compression as a *value* transformation applied to gradients before they are
+consumed (the compiled collective then moves the narrow dtype), with an
+**error-feedback** residual so compression noise does not bias convergence:
+
+    e     <- residual + g
+    g_c   <- decompress(compress(e))
+    resid <- e - g_c
+
+Modes: "none", "bf16", "int8" (per-tensor scale, stochastic rounding).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    residual: dict  # error-feedback accumulator (fp32, param-shaped)
+
+
+def compression_init(params, mode: str) -> CompressionState | None:
+    if mode == "none":
+        return None
+    return CompressionState(
+        residual=jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+        )
+    )
+
+
+def _bf16_roundtrip(g, key):
+    del key
+    return g.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _int8_roundtrip(g, key):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    scaled = g / scale
+    noise = jax.random.uniform(key, g.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, state: CompressionState | None, *, mode: str, rng):
+    """Returns (compressed_grads, new_state)."""
+    if mode == "none" or state is None:
+        return grads, state
+    fn = _bf16_roundtrip if mode == "bf16" else _int8_roundtrip
+    leaves, treedef = jax.tree.flatten(grads)
+    res = treedef.flatten_up_to(state.residual)
+    keys = jax.random.split(rng, len(leaves))
+    outs, new_res = [], []
+    for g, r, k in zip(leaves, res, keys):
+        e = r + g.astype(jnp.float32)
+        gc = fn(e, k)
+        outs.append(gc)
+        new_res.append(e - gc)
+    return treedef.unflatten(outs), CompressionState(
+        residual=treedef.unflatten(new_res)
+    )

@@ -1,0 +1,210 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Hardware model (TPU v5e-class target, per chip):
+    peak bf16 compute   197 TFLOP/s
+    HBM bandwidth       819 GB/s
+    ICI                 ~50 GB/s per link
+
+Three terms, all in seconds per step per chip (``cost_analysis()`` on the
+CPU backend reports per-partition numbers post-SPMD — probe-verified):
+
+    compute    = HLO_FLOPs / peak
+    memory     = HLO_bytes / HBM_bw
+    collective = collective_bytes / ICI_bw
+
+``collective_bytes`` is not in cost_analysis: we parse the post-SPMD HLO and
+sum per-op wire bytes with ring-algorithm conventions:
+    all-gather      -> result bytes          (each device receives ~full result)
+    all-reduce      -> 2 x operand bytes     (reduce-scatter + all-gather)
+    reduce-scatter  -> operand bytes
+    all-to-all      -> operand bytes
+    collective-permute -> operand bytes
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(([^)]*)\)",
+)
+
+
+def shape_bytes(shape_str: str) -> int:
+    """'f32[2,16,512]{...}' -> bytes.  Tuples handled by the caller."""
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _all_shapes_bytes(text: str) -> int:
+    return sum(shape_bytes(m.group(0)) for m in _SHAPE_RE.finditer(text))
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum wire bytes per collective kind from post-SPMD HLO text."""
+    out = {
+        "all-gather": 0,
+        "all-reduce": 0,
+        "reduce-scatter": 0,
+        "all-to-all": 0,
+        "collective-permute": 0,
+    }
+    counts = dict.fromkeys(out, 0)
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        result_shape, kind, operands = m.groups()
+        # async pairs: count the -start, skip the matching -done
+        if "-done(" in line or f"{kind}-done" in line:
+            continue
+        counts[kind] += 1
+        if kind == "all-gather":
+            out[kind] += _all_shapes_bytes(result_shape)
+        elif kind == "all-reduce":
+            out[kind] += 2 * _all_shapes_bytes(operands)
+        else:
+            out[kind] += _all_shapes_bytes(operands)
+    out["_counts"] = counts
+    out["total"] = sum(v for k, v in out.items() if not k.startswith("_"))
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops_per_device: float = 0.0
+    cast_bytes_per_device: float = 0.0  # CPU-backend dtype-shadow artifact
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        if self.flops_per_device <= 0:
+            return 0.0
+        return self.model_flops_per_device / self.flops_per_device
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step runs at the
+        dominant-term bound: useful_model_flops / (bound_time * peak)."""
+        if self.bound_time_s <= 0:
+            return 0.0
+        return self.model_flops_per_device / (self.bound_time_s * PEAK_FLOPS)
+
+    def to_dict(self):
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "model_flops_per_device": self.model_flops_per_device,
+            "cast_bytes_per_device": self.cast_bytes_per_device,
+            "dominant": self.dominant,
+            "bound_time_s": self.bound_time_s,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_from_compiled(
+    compiled, *, model_flops_total: float = 0.0, n_chips: int = 256
+) -> RooflineTerms:
+    """Three-term roofline from the compiled artifact.
+
+    Uses the trip-count-aware HLO walker (repro.roofline.hlo_cost):
+    ``compiled.cost_analysis()`` counts every ``while`` body once
+    (probe-verified), which under-reports scanned-layer models by the layer
+    count and silently drops per-layer FSDP collectives.
+    """
+    from repro.roofline.hlo_cost import cost_from_compiled
+
+    cost = cost_from_compiled(compiled)
+    return RooflineTerms(
+        compute_s=cost.flops / PEAK_FLOPS,
+        memory_s=cost.bytes / HBM_BW,
+        collective_s=cost.coll_total / ICI_BW,
+        flops_per_device=cost.flops,
+        bytes_per_device=cost.bytes,
+        coll_bytes_per_device=cost.coll_total,
+        model_flops_per_device=model_flops_total / n_chips,
+        cast_bytes_per_device=cost.cast_bytes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Analytic "useful" FLOPs (MODEL_FLOPS) per (arch x shape)
+# ---------------------------------------------------------------------------
+def model_flops(cfg, shape) -> float:
+    """6*N*D for training, 2*N_active*D + attention reads for inference."""
+    n_active = cfg.active_param_count()
+    b, s = shape.global_batch, shape.seq_len
+    kinds = cfg.layer_kinds()
+    n_attn_layers = sum(1 for k in kinds if k in ("global", "local"))
+
+    def attn_flops_prefill(tokens_sq_sum):
+        # 2 matmuls (QK^T, PV), causal halves the area; per attn layer.
+        if cfg.mla is not None:
+            width = cfg.mla.d_latent + cfg.mla.d_rope + cfg.mla.d_latent
+            return n_attn_layers * cfg.n_heads * tokens_sq_sum * width
+        return n_attn_layers * cfg.n_heads * tokens_sq_sum * 2 * cfg.head_dim
+
+    if shape.kind == "train":
+        tokens = b * s
+        flops = 6.0 * n_active * tokens
+        flops += 3 * attn_flops_prefill(b * s * s)  # fwd+bwd, causal ~ s^2/2 *2
+        return flops
+    if shape.kind == "prefill":
+        tokens = b * s
+        return 2.0 * n_active * tokens + attn_flops_prefill(b * s * s / 2 * 2)
+    # decode: s_q new tokens against a cache of s keys
+    tokens = b * shape.s_q
+    flops = 2.0 * n_active * tokens
+    if cfg.mla is not None:
+        width = 2 * cfg.mla.d_latent + cfg.mla.d_rope
+        flops += 2.0 * n_attn_layers * b * shape.s_q * cfg.n_heads * s * width
+    else:
+        flops += (
+            2.0 * n_attn_layers * b * shape.s_q * cfg.n_heads * s * 2 * cfg.head_dim
+        )
+    return flops

@@ -1,0 +1,492 @@
+"""Trip-count-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE (probe-verified:
+a scan of 8 matmuls reports 1/8 of the true FLOPs), which makes it useless
+for scanned-layer models — and silently *drops per-layer FSDP collectives*
+from any traffic estimate.  This module walks the post-optimization HLO text
+(``compiled.as_text()``) and accumulates:
+
+    flops       2 * prod(result) * prod(contraction) per dot (+ elementwise)
+    bytes       operand + result bytes at fusion/op boundaries (HBM proxy;
+                fusion-internal ops are VMEM-local and not counted)
+    collectives wire bytes per kind (ring conventions, see below)
+
+multiplying every ``while`` body/cond by its trip count (recovered from the
+loop-bound constant in the condition computation).
+
+Conventions for collective wire bytes (per participating device):
+    all-gather          result_bytes * (n-1)/n  ~= result bytes
+    all-reduce          2 * operand_bytes       (reduce-scatter + all-gather)
+    reduce-scatter      operand_bytes
+    all-to-all          operand_bytes
+    collective-permute  operand_bytes
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<shape>\([^()]*\)|\S+)\s+"
+    r"(?P<opcode>[\w\-]+)\((?P<operands>.*?)\)(?P<attrs>.*)$"
+)
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?(?P<name>[\w.\-]+)\s+\((?P<args>.*)\)\s+->")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_REF_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+ELEMENTWISE_TRANSCENDENTAL = {
+    "exponential", "exp", "tanh", "log", "logistic", "rsqrt", "sqrt",
+    "power", "sin", "cos", "expm1", "log1p", "atan2", "cbrt", "erf",
+}
+NO_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        _, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes: float = 0.0
+    # dtype-conversion-only traffic: exists on the CPU backend because its
+    # dot thunks cannot consume bf16 (XLA materialises f32 shadows of bf16
+    # buffers); native-bf16 MXU hardware never emits these.  Reported
+    # separately and excluded from the TPU roofline memory term.
+    cast_bytes: float = 0.0
+    coll: dict = field(default_factory=dict)
+    coll_counts: dict = field(default_factory=dict)
+
+    def __iadd__(self, other):
+        self.flops += other.flops
+        self.transcendentals += other.transcendentals
+        self.bytes += other.bytes
+        self.cast_bytes += other.cast_bytes
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0) + v
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v
+        return self
+
+    def scaled(self, factor: float) -> "Cost":
+        return Cost(
+            flops=self.flops * factor,
+            transcendentals=self.transcendentals * factor,
+            bytes=self.bytes * factor,
+            cast_bytes=self.cast_bytes * factor,
+            coll={k: v * factor for k, v in self.coll.items()},
+            coll_counts={k: v * factor for k, v in self.coll_counts.items()},
+        )
+
+    @property
+    def coll_total(self) -> float:
+        return float(sum(self.coll.values()))
+
+
+@dataclass
+class _Op:
+    name: str
+    shape: str
+    opcode: str
+    operands: str
+    attrs: str
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: dict[str, list[_Op]] = {}
+        self.symbols: dict[str, dict[str, str]] = {}  # comp -> op name -> shape
+        self.entry: str | None = None
+        self._memo: dict[str, Cost] = {}
+        self._parse(hlo_text)
+
+    @staticmethod
+    def _joined_lines(text: str):
+        """Join multi-line definitions (giant tuple shapes wrap over lines).
+
+        A new unit starts at: an op line (``%name = ...`` / ``ROOT %...``),
+        a computation header (``%name (args...) -> ...`` or ``ENTRY ...``),
+        or a closing brace.  Everything else is a continuation.
+        """
+        start_re = re.compile(r"^(ROOT\s+)?%[\w.\-]+\s*(=|\()")
+        buf = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            stripped = line.lstrip()
+            is_start = (
+                bool(start_re.match(stripped))
+                or stripped.startswith(("ENTRY", "HloModule"))
+                or stripped.startswith("}")
+            )
+            if is_start:
+                if buf is not None:
+                    yield buf
+                buf = line
+            elif buf is not None:
+                buf += " " + stripped
+            else:
+                buf = line
+        if buf is not None:
+            yield buf
+
+    def _parse(self, text: str):
+        current = None
+        for line in self._joined_lines(text):
+            if line.startswith(("HloModule", "//", "#")):
+                continue
+            if not line.startswith(" ") and ("->" in line) and line.rstrip().endswith("{"):
+                m = _COMP_RE.match(line)
+                if m:
+                    current = m.group("name")
+                    self.computations[current] = []
+                    self.symbols[current] = {}
+                    if line.startswith("ENTRY"):
+                        self.entry = current
+                continue
+            if line.lstrip().startswith("}"):
+                current = None
+                continue
+            if current is None:
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            op = _Op(
+                name=m.group("name"),
+                shape=m.group("shape"),
+                opcode=m.group("opcode"),
+                operands=m.group("operands"),
+                attrs=m.group("attrs"),
+            )
+            self.computations[current].append(op)
+            self.symbols[current][op.name] = op.shape
+
+    # ------------------------------------------------------------------
+    def trip_count(self, cond_name: str) -> int:
+        """Loop bound = the max integer constant in the condition."""
+        best = 1
+        for op in self.computations.get(cond_name, []):
+            if op.opcode == "constant":
+                try:
+                    best = max(best, int(op.operands.strip()))
+                except ValueError:
+                    continue
+        return best
+
+    def _operand_shapes(self, comp: str, operands: str) -> list[str]:
+        syms = self.symbols.get(comp, {})
+        return [
+            syms[r]
+            for r in _OPERAND_REF_RE.findall(operands)
+            if r in syms
+        ]
+
+    def _dot_flops(self, comp: str, op: _Op) -> float:
+        result_elems = shape_elems(op.shape)
+        contract = 1
+        shapes = self._operand_shapes(comp, op.operands)
+        m = _CONTRACT_RE.search(op.attrs)
+        if m and shapes:
+            lhs_dims = shape_dims(shapes[0])
+            idxs = [int(i) for i in m.group(1).split(",") if i != ""]
+            for i in idxs:
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+        return 2.0 * result_elems * contract
+
+    def _collective(self, op: _Op, comp: str) -> tuple[str, float] | None:
+        base = op.opcode
+        for k in COLLECTIVES:
+            if base == k or base == k + "-start":
+                if base.endswith("-done"):
+                    return None
+                op_bytes = sum(
+                    shape_bytes(s) for s in self._operand_shapes(comp, op.operands)
+                )
+                res_bytes = shape_bytes(op.shape)
+                if k == "all-gather":
+                    # result shape of -start is a tuple (operand, result)
+                    return k, max(res_bytes - op_bytes, res_bytes // 2)
+                if k == "all-reduce":
+                    return k, 2 * op_bytes
+                return k, op_bytes
+        return None
+
+    def computation_cost(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Cost()
+        for op in self.computations.get(comp, []):
+            oc = op.opcode
+            if oc in NO_BYTES:
+                continue
+            if oc == "while":
+                body = _BODY_RE.search(op.attrs)
+                cond = _COND_RE.search(op.attrs)
+                if body and cond:
+                    trips = self.trip_count(cond.group(1))
+                    inner = Cost()
+                    inner += self.computation_cost(body.group(1))
+                    inner += self.computation_cost(cond.group(1))
+                    total += inner.scaled(trips)
+                continue
+            if oc == "conditional":
+                m = _BRANCHES_RE.search(op.attrs)
+                if m:
+                    branches = [
+                        b.strip().lstrip("%")
+                        for b in m.group(1).split(",")
+                        if b.strip()
+                    ]
+                    costs = [self.computation_cost(b) for b in branches]
+                    if costs:
+                        total += max(costs, key=lambda c: c.flops + c.bytes)
+                continue
+            if oc in ("call", "async-start", "async-done"):
+                m = _CALLS_RE.search(op.attrs)
+                if m:
+                    total += self.computation_cost(m.group(1))
+                continue
+            if oc == "fusion":
+                m = _CALLS_RE.search(op.attrs)
+                if m:
+                    called = m.group(1)
+                    inner = self.computation_cost(called)
+                    # fusion internals are VMEM-local: keep flops, drop bytes
+                    total.flops += inner.flops
+                    total.transcendentals += inner.transcendentals
+                    bb = self._fusion_boundary_bytes(comp, op, called)
+                    if self._is_pure_movement(called):
+                        total.cast_bytes += bb
+                    else:
+                        total.bytes += bb
+                else:
+                    total.bytes += sum(
+                        shape_bytes(s)
+                        for s in self._operand_shapes(comp, op.operands)
+                    ) + shape_bytes(op.shape)
+                continue
+            coll = self._collective(op, comp)
+            if coll is not None:
+                kind, nbytes = coll
+                total.coll[kind] = total.coll.get(kind, 0) + nbytes
+                total.coll_counts[kind] = total.coll_counts.get(kind, 0) + 1
+                total.bytes += shape_bytes(op.shape)
+                continue
+            if oc.endswith("-done"):
+                continue
+            if oc in ("dot", "convolution"):
+                total.flops += self._dot_flops(comp, op)
+                total.bytes += sum(
+                    shape_bytes(s)
+                    for s in self._operand_shapes(comp, op.operands)
+                ) + shape_bytes(op.shape)
+                continue
+            if oc in ("reduce", "reduce-window"):
+                total.flops += shape_elems(op.shape) * 2
+                total.bytes += sum(
+                    shape_bytes(s)
+                    for s in self._operand_shapes(comp, op.operands)
+                ) + shape_bytes(op.shape)
+                continue
+            if oc == "convert":
+                total.cast_bytes += 2 * shape_bytes(op.shape)
+                continue
+            # generic op: elementwise-ish flops + boundary bytes
+            elems = shape_elems(op.shape)
+            if oc in ELEMENTWISE_TRANSCENDENTAL:
+                total.transcendentals += elems
+                total.flops += 8 * elems
+            elif oc in ("add", "multiply", "subtract", "divide", "maximum",
+                        "minimum", "compare", "select", "and", "or", "xor",
+                        "negate", "abs", "clamp"):
+                total.flops += elems
+            total.bytes += shape_bytes(op.shape)
+            if oc in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced region (~= result), not the buffer
+                total.bytes += shape_bytes(op.shape)
+            elif oc == "dynamic-update-slice":
+                # reads the update operand, writes the updated region; the
+                # big buffer is aliased in place, not copied
+                op_shapes = self._operand_shapes(comp, op.operands)
+                upd = min((shape_bytes(s) for s in op_shapes), default=0)
+                total.bytes += 2 * upd - shape_bytes(op.shape)  # undo result
+            elif oc == "scatter":
+                # operand 0 (the target buffer) aliases in place; traffic is
+                # ~indices + 2 x updates (vmapped cache DUS lowers to this)
+                op_shapes = self._operand_shapes(comp, op.operands)
+                total.bytes += (
+                    2 * sum(shape_bytes(s) for s in op_shapes[1:])
+                    - shape_bytes(op.shape)  # undo the result added above
+                )
+            elif oc in ("copy", "concatenate", "pad", "transpose", "reshape",
+                        "broadcast", "sort", "custom-call"):
+                total.bytes += sum(
+                    shape_bytes(s)
+                    for s in self._operand_shapes(comp, op.operands)
+                )
+        self._memo[comp] = total
+        return total
+
+    _MOVEMENT_OPS = {
+        "parameter", "constant", "convert", "bitcast", "copy", "reshape",
+        "broadcast", "dynamic-update-slice", "dynamic-slice", "tuple",
+        "get-tuple-element", "transpose", "slice", "select", "compare",
+        "iota", "pad", "concatenate", "and", "or", "not",
+    }
+
+    def _is_pure_movement(self, called: str) -> bool:
+        """Dtype-shadow maintenance fusion: converts + predicated moves of a
+        full-size buffer, no arithmetic.  These exist only because the CPU
+        backend cannot dot bf16 (it keeps f32 shadows of bf16 buffers)."""
+        ops = self.computations.get(called, [])
+        if not ops or not any(o.opcode == "convert" for o in ops):
+            return False
+        if not all(o.opcode in self._MOVEMENT_OPS for o in ops):
+            return False
+        # full-buffer pass-through: result size ~= the largest operand size
+        result = shape_elems(ops[-1].shape)
+        biggest = max(
+            (shape_elems(o.shape) for o in ops if o.opcode == "parameter"),
+            default=0,
+        )
+        return result > 0 and biggest > 0 and result == biggest
+
+    # ------------------------------------------------------------------
+    def _fusion_boundary_bytes(self, comp: str, op: _Op, called: str) -> float:
+        """HBM traffic at a fusion boundary.
+
+        A fusion parameter consumed ONLY by dynamic-slice/gather inside the
+        fusion reads ~the slice per invocation, not the whole buffer (the
+        scan-xs pattern: a (trips, ...) stack sliced per iteration) —
+        charging the full stack per iteration would overcount by the trip
+        count.  A root dynamic-update-slice writes only the update region.
+        """
+        inner_ops = self.computations.get(called, [])
+        # map parameter index -> op name
+        param_names = [o.name for o in inner_ops if o.opcode == "parameter"]
+        # which params are consumed only by slicing ops?
+        sliced_only: dict[str, int] = {}
+        consumers: dict[str, list[_Op]] = {p: [] for p in param_names}
+        for o in inner_ops:
+            for r in _OPERAND_REF_RE.findall(o.operands):
+                if r in consumers:
+                    consumers[r].append(o)
+        for p, cons in consumers.items():
+            if cons and all(c.opcode in ("dynamic-slice", "gather") for c in cons):
+                sliced_only[p] = sum(shape_bytes(c.shape) for c in cons)
+
+        # A root dynamic-update-slice aliases its target buffer in place:
+        # the buffer parameter must not be charged (scan-ys accumulation
+        # writes one slice per iteration into a (trips, ...) stack — charging
+        # the stack per iteration overcounts by the trip count).
+        root = inner_ops[-1] if inner_ops else None
+        root_dus = root is not None and root.opcode == "dynamic-update-slice"
+        aliased: set[str] = set()
+        if root_dus:
+            refs = _OPERAND_REF_RE.findall(root.operands)
+            if refs:
+                target = refs[0]
+                # follow simple pass-through chains back to a parameter
+                by_name = {o.name: o for o in inner_ops}
+                for _ in range(4):
+                    o = by_name.get(target)
+                    if o is None:
+                        break
+                    if o.opcode == "parameter":
+                        aliased.add(o.name)
+                        break
+                    if o.opcode in ("bitcast", "copy", "reshape", "convert"):
+                        nxt = _OPERAND_REF_RE.findall(o.operands)
+                        if not nxt:
+                            break
+                        target = nxt[0]
+                    else:
+                        break
+
+        # order parameters by index to match call-site operands
+        def param_index(o):
+            try:
+                return int(o.operands.strip() or 0)
+            except ValueError:
+                return 0
+
+        indexed = sorted(
+            (o for o in inner_ops if o.opcode == "parameter"), key=param_index
+        )
+        operand_shapes = self._operand_shapes(comp, op.operands)
+        bts = 0.0
+        for i, s in enumerate(operand_shapes):
+            pname = indexed[i].name if i < len(indexed) else None
+            if pname is not None and pname in aliased:
+                continue
+            if pname is not None and pname in sliced_only:
+                bts += min(shape_bytes(s), sliced_only[pname])
+            else:
+                bts += shape_bytes(s)
+        # result: a root dynamic-update-slice writes only the update region
+        if root_dus:
+            upd_shapes = self._operand_shapes(called, root.operands)
+            bts += min((shape_bytes(s) for s in upd_shapes), default=0)
+        else:
+            bts += shape_bytes(op.shape)
+        return bts
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.computation_cost(self.entry)
+
+
+def cost_from_compiled(compiled) -> Cost:
+    return HloCostModel(compiled.as_text()).entry_cost()

@@ -1,0 +1,41 @@
+"""Elastic scaling: reshard a training state onto a different mesh.
+
+When the cluster grows or shrinks (node failure without hot spares, or
+capacity arriving), the same sharding *policy* re-evaluated against the new
+mesh gives the target layout; resharding is a host-staged gather + placed
+put per leaf.  Data-parallel batch size is preserved by the caller adjusting
+grad_accum (global batch invariance).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.runtime import sharding
+
+
+def reshard_tree(tree, new_mesh, spec_fn):
+    """Move every leaf to ``new_mesh`` with specs from ``spec_fn``."""
+
+    def move(path, leaf):
+        spec = spec_fn(path, leaf)
+        target = jax.sharding.NamedSharding(new_mesh, spec)
+        host = jax.device_get(leaf)  # gather to host (full value)
+        return jax.device_put(host, target)
+
+    return jax.tree_util.tree_map_with_path(move, tree)
+
+
+def reshard_train_state(params, opt_state, old_mesh, new_mesh, *, multi_pod=False):
+    del old_mesh
+    pfn = sharding.param_spec_fn(new_mesh, multi_pod=multi_pod)
+    params = reshard_tree(params, new_mesh, pfn)
+    opt_state = type(opt_state)(
+        count=jax.device_put(
+            jax.device_get(opt_state.count),
+            jax.sharding.NamedSharding(new_mesh, jax.sharding.PartitionSpec()),
+        ),
+        mu=reshard_tree(opt_state.mu, new_mesh, pfn),
+        nu=reshard_tree(opt_state.nu, new_mesh, pfn),
+    )
+    return params, opt_state

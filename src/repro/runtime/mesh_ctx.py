@@ -1,0 +1,45 @@
+"""Process-global mesh/policy context for model-internal sharding decisions.
+
+Model code (attention layers, MoE dispatch) sometimes needs the concrete
+mesh to build shard_map regions or sharding constraints; threading it
+through every config would contaminate pure-model signatures, so the launch
+factories set it here around lowering/execution.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+_CURRENT: dict = {"mesh": None, "policy": "tp_fsdp", "multi_pod": False}
+
+
+def set_mesh_ctx(mesh, policy: str = "tp_fsdp", multi_pod: bool = False):
+    _CURRENT.update(mesh=mesh, policy=policy, multi_pod=multi_pod)
+
+
+def clear_mesh_ctx():
+    _CURRENT.update(mesh=None, policy="tp_fsdp", multi_pod=False)
+
+
+@contextmanager
+def mesh_ctx(mesh, policy: str = "tp_fsdp", multi_pod: bool = False):
+    prev = dict(_CURRENT)
+    set_mesh_ctx(mesh, policy, multi_pod)
+    try:
+        yield
+    finally:
+        _CURRENT.update(prev)
+
+
+def current_mesh():
+    return _CURRENT["mesh"]
+
+
+def current_policy() -> str:
+    return _CURRENT["policy"]
+
+
+def data_axes_in_ctx():
+    from repro.runtime.sharding import data_axes
+
+    return data_axes(_CURRENT["multi_pod"])

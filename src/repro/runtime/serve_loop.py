@@ -1,0 +1,153 @@
+"""Distributed serving: sharded prefill + decode step factories and a
+batched serving session (continuous-batching-lite).
+
+Cache sharding follows runtime.sharding.cache_spec_fn: batch over ``data``
+when divisible (decode_32k: 128/16), else sequence-parallel split-KV over
+``data`` (long_500k: batch 1, 524288 keys), head/latent width over ``model``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime import sharding
+
+
+def jit_serve_fns(
+    model, mesh, params_like, cache_like, *, multi_pod=False, policy="tp_fsdp"
+):
+    """Returns (compile_prefill, compile_decode, shardings)."""
+    pfn = sharding.param_spec_fn(
+        mesh, multi_pod=multi_pod, policy=policy, cfg=model.cfg
+    )
+    cfn = sharding.cache_spec_fn(mesh, multi_pod=multi_pod, policy=policy)
+    bfn = sharding.batch_spec_fn(mesh, multi_pod=multi_pod, policy=policy)
+
+    param_sh = sharding.make_shardings(mesh, params_like, pfn)
+    cache_sh = sharding.make_shardings(mesh, cache_like, cfn)
+    rep = NamedSharding(mesh, P())
+
+    def tokens_sh(tokens_like):
+        return sharding.make_shardings(mesh, tokens_like, bfn)
+
+    def decode_fn(params, cache, tokens, cache_len):
+        return model.decode_step(params, cache, tokens, cache_len)
+
+    def prefill_fn(params, cache, tokens):
+        return model.prefill(params, cache, tokens)
+
+    def compile_decode(tokens_like):
+        return jax.jit(
+            decode_fn,
+            in_shardings=(param_sh, cache_sh, tokens_sh(tokens_like), rep),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(1,),
+        )
+
+    def compile_prefill(tokens_like):
+        return jax.jit(
+            prefill_fn,
+            in_shardings=(param_sh, cache_sh, tokens_sh(tokens_like)),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(1,),
+        )
+
+    return compile_prefill, compile_decode, {
+        "params": param_sh,
+        "cache": cache_sh,
+    }
+
+
+class ServingSession:
+    """Single-host batched serving with slot reuse (continuous-batching-lite).
+
+    A fixed batch of decode slots; each new request is prefilled into a free
+    slot (ragged lengths handled by per-slot cache_len), every ``step()``
+    advances all active slots one token, and finished requests free their
+    slot for the next queued prompt.  Greedy sampling.
+    """
+
+    def __init__(self, model, params, *, batch_size: int, max_len: int):
+        self.model = model
+        self.params = params
+        self.batch = batch_size
+        self.max_len = max_len
+        self.cache = model.init_cache(params, batch_size, max_len)
+        self.cache_len = np.zeros((batch_size,), np.int32)
+        self.last_token = np.zeros((batch_size,), np.int32)
+        self.slot_rid: list[int | None] = [None] * batch_size
+        self.outputs: dict[int, list[int]] = {}
+        self._next_id = 0
+        self._decode = jax.jit(model.decode_step)
+
+    @property
+    def active_mask(self) -> np.ndarray:
+        return np.asarray([r is not None for r in self.slot_rid])
+
+    def add_request(self, prompt_tokens) -> int | None:
+        """Prefill a prompt into a free slot; returns request id or None."""
+        if None not in self.slot_rid:
+            return None
+        slot = self.slot_rid.index(None)
+        rid = self._next_id
+        self._next_id += 1
+        prompt = jnp.asarray(prompt_tokens, jnp.int32)[None]
+        plen = prompt.shape[1]
+        # Prefill this slot by running the full-batch decode over the prompt
+        # with only this slot's cache_len advancing (other rows are no-ops on
+        # their own cache positions because their tokens re-write in place).
+        single = self.model.init_cache(self.params, 1, self.max_len)
+        logits, single = self.model.prefill(self.params, single, prompt)
+        self.cache = jax.tree.map(
+            lambda full, one: _write_slot(full, one, slot), self.cache, single
+        )
+        self.cache_len[slot] = plen
+        first = int(jnp.argmax(logits[0, -1]))
+        self.last_token[slot] = first
+        self.slot_rid[slot] = rid
+        self.outputs[rid] = [first]
+        return rid
+
+    def step(self):
+        """One decode step for every active slot."""
+        if not self.active_mask.any():
+            return
+        logits, self.cache = self._decode(
+            self.params,
+            self.cache,
+            jnp.asarray(self.last_token)[:, None],
+            jnp.asarray(self.cache_len),
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        act = self.active_mask
+        for slot, rid in enumerate(self.slot_rid):
+            if rid is not None:
+                self.outputs[rid].append(int(nxt[slot]))
+                self.last_token[slot] = nxt[slot]
+        self.cache_len = self.cache_len + act.astype(np.int32)
+
+    def finish(self, rid: int) -> list[int]:
+        slot = self.slot_rid.index(rid)
+        self.slot_rid[slot] = None
+        self.cache_len[slot] = 0
+        return self.outputs.pop(rid)
+
+
+def _write_slot(full, one, slot):
+    """Write a batch-1 cache leaf into ``full`` at batch position ``slot``.
+
+    Handles both stacked leaves (L/groups leading dim: batch is axis 1) and
+    flat leaves (batch is axis 0).
+    """
+    if one.ndim == full.ndim and one.shape[0] == full.shape[0] and full.shape[0] != 1:
+        # stacked: (L, 1, ...) into (L, B, ...)
+        start = [0] * full.ndim
+        start[1] = slot
+    else:
+        start = [0] * full.ndim
+        start[0] = slot
+    return jax.lax.dynamic_update_slice(full, one.astype(full.dtype), tuple(start))

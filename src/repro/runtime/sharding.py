@@ -1,0 +1,296 @@
+"""Sharding policy: DP (pod) x FSDP (data) x TP/EP (model) + SP fallbacks.
+
+Single source of truth mapping every parameter / optimizer / cache / batch
+leaf to a PartitionSpec over the production mesh:
+
+    single-pod:  (data=16, model=16)          = 256 chips
+    multi-pod:   (pod=2, data=16, model=16)   = 512 chips
+
+Rules (per DESIGN.md §6):
+  * 2-D weights (d_in, d_out): FSDP on d_in over ``data``, TP on d_out over
+    ``model`` — each applied only when the dim is shardable (divisible, or
+    large enough that GSPMD padding overhead is negligible).
+  * embedding tables (vocab, d): vocab TP over ``model``, FSDP over ``data``.
+  * MoE experts (E, d, ff): EP over ``model`` when E divides it (qwen3-moe
+    128e), else TP-within-expert on ff (granite 40e — 16 does not divide 40).
+  * MLA projections: head-dim TP when n_heads divides ``model``.
+  * scan-stacked leaves (leading n_groups/L dim) apply the rule to the
+    trailing dims.
+  * KV caches: batch over ``data`` when divisible, else *sequence* over
+    ``data`` (split-KV decode for long_500k's global_batch=1); head_dim (or
+    latent width) over ``model``.
+  * ``pod`` axis carries pure DP: parameters replicated across pods,
+    gradients all-reduced over it (optimizer state likewise replicated).
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def data_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _shardable(dim: int, axis_size: int) -> bool:
+    # jit argument shardings require exact divisibility (GSPMD padding is
+    # only available for intermediates), so the policy is exact-only.
+    return dim % axis_size == 0
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def param_spec_fn(mesh, *, multi_pod: bool, fsdp: bool = True, policy: str = "tp_fsdp", cfg=None):
+    """Returns fn(path, leaf_shape_dtype) -> PartitionSpec.
+
+    ``policy`` selects the parallelism layout (hillclimb knob):
+      tp_fsdp   TP over "model" + FSDP over "data"          (baseline)
+      fsdp      no TP; FSDP over "data" only; "model" becomes extra DP
+      fsdp2d    no TP; FSDP over the flattened ("data","model") axes (ZeRO
+                over all chips) — smallest param footprint, no TP collectives
+      dp        fully replicated params (pure DP; tiny models)
+    """
+    model_n = mesh.shape["model"]
+    data_n = mesh.shape["data"]
+    if policy == "dp":
+        return lambda path, leaf: P(*((None,) * len(leaf.shape)))
+    if policy == "fsdp2d":
+        flat_n = data_n * model_n
+
+        def rule2d(path, leaf):
+            name = _path_str(path)
+            shape = tuple(leaf.shape)
+            stacked = ("groups" in name or "layers" in name) and len(shape) >= 2
+            dims = shape[1:] if stacked else shape
+            spec = [None] * len(dims)
+            # shard the largest shardable dim over the flattened axes
+            order = sorted(range(len(dims)), key=lambda i: -dims[i])
+            for i in order:
+                if dims[i] % flat_n == 0:
+                    spec[i] = ("data", "model")
+                    break
+                if dims[i] % data_n == 0 and spec[i] is None:
+                    spec[i] = "data"
+                    break
+            if stacked:
+                spec = [None] + spec
+            return P(*spec)
+
+        return rule2d
+    if policy == "fsdp":
+        fsdp, use_tp = True, False
+    elif policy in ("tp", "seqkv"):
+        # serving layouts: TP weights, NO FSDP — parameters stay resident
+        # per-chip instead of being re-gathered every decode step
+        fsdp, use_tp = False, True
+    else:
+        use_tp = True
+    dax = ("data",) if fsdp else ()
+    dspec = dax[0] if dax else None
+    if not use_tp:
+        model_n = 10**9  # nothing divides this => no "model" sharding
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        shape = tuple(leaf.shape)
+        stacked = ("groups" in name or "layers" in name) and len(shape) >= 2
+        dims = shape[1:] if stacked else shape
+        nd = len(dims)
+
+        if nd == 0 or nd == 1:
+            spec: tuple = (None,) * nd
+        elif nd == 2:
+            d0, d1 = dims
+            if "table" in name:  # embedding: vocab TP + FSDP(d)
+                if _shardable(d0, model_n):
+                    spec = (
+                        "model",
+                        dspec if fsdp and _shardable(d1, data_n) else None,
+                    )
+                elif _shardable(d1, model_n * data_n) and fsdp:
+                    # awkward vocab (50280/49155/256206): shard the model
+                    # dim over both axes instead
+                    spec = (None, ("data", "model"))
+                else:
+                    spec = (
+                        None,
+                        "model" if _shardable(d1, model_n) else None,
+                    )
+            else:
+                tp_ok = _shardable(d1, model_n)
+                # Megatron GQA rule: K/V projections are sharded over heads
+                # only when kv-heads divide the TP axis; otherwise replicate
+                # their output dim — slicing inside a head would psum the
+                # attention scores every KV block (dry-run: 2.5 TB/step on
+                # qwen3-moe train_4k).
+                if (
+                    tp_ok
+                    and cfg is not None
+                    and re.search(r"/w[kv]($|/)", name)
+                    and cfg.n_kv_heads % model_n != 0
+                ):
+                    tp_ok = False
+                spec = (
+                    dspec if fsdp and _shardable(d0, data_n) else None,
+                    "model" if tp_ok else None,
+                )
+        elif nd == 3:
+            d0, d1, d2 = dims
+            if any(k in name for k in ("mlp/gate", "mlp/up", "mlp/down")):
+                # MoE experts (E, din, dout)
+                if d0 % model_n == 0:
+                    # EP only — no FSDP on expert weights: d/ff are matmul
+                    # contraction dims, so FSDP-sharding them psums every
+                    # expert matmul over "data" (dry-run: 1.5 TB/step on
+                    # qwen3-moe); at E/16 experts per chip the unsharded
+                    # remainder is ~150 MB — FSDP buys nothing here.
+                    spec = ("model", None, None)
+                elif "down" in name:  # granite: TP-within-expert; (E, ff, d)
+                    spec = (
+                        None,
+                        "model" if _shardable(d1, model_n) else None,
+                        dspec if fsdp and _shardable(d2, data_n) else None,
+                    )
+                else:  # granite gate/up: (E, d, ff)
+                    spec = (
+                        None,
+                        dspec if fsdp and _shardable(d1, data_n) else None,
+                        "model" if _shardable(d2, model_n) else None,
+                    )
+            elif "wq_nope" in name or "wq_rope" in name:
+                spec = (
+                    dspec if fsdp and _shardable(d0, data_n) else None,
+                    "model" if d1 % model_n == 0 else None,
+                    None,
+                )
+            elif "w_uk" in name or "w_uv" in name:
+                spec = ("model" if d0 % model_n == 0 else None, None, None)
+            else:
+                spec = (
+                    dspec if fsdp and _shardable(d0, data_n) else None,
+                    None,
+                    "model" if _shardable(d2, model_n) else None,
+                )
+        else:
+            spec = (None,) * nd
+
+        if stacked:
+            spec = (None,) + tuple(spec)
+        return P(*spec)
+
+    return rule
+
+
+def tree_specs(tree, spec_fn):
+    return jax.tree_util.tree_map_with_path(spec_fn, tree)
+
+
+def tree_shardings(tree, mesh, spec_fn):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_fn(path, leaf)), tree
+    )
+
+
+def batch_spec_fn(mesh, *, multi_pod: bool, policy: str = "tp_fsdp"):
+    """Input batches: leading batch dim over the data-parallel axes.
+
+    Under non-TP policies ("fsdp", "fsdp2d", "dp") the "model" axis carries
+    extra data parallelism, so the batch shards over it too.
+    """
+    dax = data_axes(multi_pod)
+    if policy in ("fsdp", "fsdp2d", "dp"):
+        dax = dax + ("model",)
+    total = 1
+    for a in dax:
+        total *= mesh.shape[a]
+
+    def rule(path, leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        b = shape[0]
+        first = dax if b % total == 0 else None
+        if first is None and b % (total // mesh.shape[dax[-1]]) == 0:
+            first = dax[:-1]  # fall back to fewer axes
+        return P(first, *([None] * (len(shape) - 1)))
+
+    return rule
+
+
+def cache_spec_fn(mesh, *, multi_pod: bool, policy: str = "tp_fsdp"):
+    """KV/SSM caches.
+
+    Policies:
+      tp_fsdp  batch over data; head/latent width over model.  NOTE: width
+               (head-dim) sharding forces the decode attention to all-gather
+               the *whole cache* every step (dry-run-measured: 55 GB/step
+               for internlm2 decode_32k) — kept as the paper-faithful naive
+               baseline.
+      seqkv    batch over data; cache SEQUENCE over model (split-KV): each
+               chip attends to S/16 keys locally, reconciled by tiny
+               softmax-stat collectives.  The distributed analogue of the
+               paper's KV-block loop.
+      fsdp/fsdp2d/dp   batch over (data, model) when divisible; widths
+               unsharded (decode of small models).
+    """
+    dax = data_axes(multi_pod)
+    if policy in ("fsdp", "fsdp2d", "dp"):
+        dax = dax + ("model",)
+    total = 1
+    for a in dax:
+        total *= mesh.shape[a]
+    model_n = mesh.shape["model"] if policy == "tp_fsdp" else 10**9
+    if policy == "seqkv":
+        model_n = 10**9  # widths unsharded; sequence takes "model"
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        shape = tuple(leaf.shape)
+        stacked = ("groups" in name or "self" in name or "cross" in name) and len(
+            shape
+        ) >= 3
+        off = 1 if stacked else 0
+        nd = len(shape)
+        spec = [None] * nd
+        if nd - off < 1:
+            return P(*spec)
+        b = shape[off]
+        batch_shardable = b % total == 0
+        if batch_shardable:
+            spec[off] = dax
+        # width dim: last axis over model when divisible
+        if shape[-1] % model_n == 0 and shape[-1] >= model_n:
+            spec[-1] = "model"
+        elif nd - off >= 3 and shape[off + 1] % model_n == 0 and "h" in name:
+            spec[off + 1] = "model"  # ssm heads
+        # The cache sequence axis = the largest non-terminal dim (robust to
+        # both bshd and bhsd layouts: S is 32k-524k vs heads/dh <= 576).
+        if nd - off >= 3:
+            inner = list(range(off + 1, nd - 1)) or [off + 1]
+            seq_axis = max(inner, key=lambda i: shape[i])
+            # sequence-parallel fallback over data when batch unshardable
+            if (
+                not batch_shardable
+                and shape[seq_axis] % total == 0
+                and spec[seq_axis] is None
+            ):
+                spec[seq_axis] = dax
+            if policy == "seqkv":
+                mdl = mesh.shape["model"]
+                if shape[seq_axis] % mdl == 0 and spec[seq_axis] is None:
+                    spec[seq_axis] = "model"
+        return P(*spec)
+
+    return rule
+
+
+def make_shardings(mesh, tree, spec_fn):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_fn(path, leaf)), tree
+    )

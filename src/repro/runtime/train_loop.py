@@ -1,0 +1,189 @@
+"""Distributed training step factory.
+
+Composes: FSDP/TP-sharded params + optimizer, per-layer remat, gradient
+accumulation via ``lax.scan`` microbatching, chunked cross-entropy (inside
+the model loss), gradient compression with error feedback, cosine schedule,
+global-norm clipping, donated buffers.
+
+The returned step is a single jit whose in/out shardings come from
+runtime.sharding; under the production mesh XLA inserts the reduce-scatter /
+all-gather schedule (FSDP), the TP collectives, and the pod-level gradient
+all-reduce.  Compute/communication overlap is delegated to XLA's latency-
+hiding scheduler (flags in launch scripts) — microbatching exposes the
+per-microbatch gradient reductions it overlaps.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, cosine_schedule
+from repro.optim.compression import compress_grads, compression_init
+from repro.runtime import sharding
+
+
+class TrainConfig(NamedTuple):
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    grad_accum: int = 1
+    remat: bool = True
+    compression: str = "none"  # none | bf16 | int8
+    n_loss_chunks: int = 8
+    # mesh axis (or axes tuple) each microbatch's batch dim is sharded over;
+    # None disables the explicit constraint (single-device tests)
+    microbatch_spec: object = None
+
+
+def init_train_state(model, rng):
+    params = model.init(rng)
+    return params, adamw_init(params), compression_init(
+        params, "none"
+    )
+
+
+def make_train_step(model, tc: TrainConfig):
+    """Returns train_step(params, opt_state, comp_state, batch, step)."""
+
+    def loss_fn(params, batch):
+        return model.loss(
+            params, batch, remat=tc.remat, n_loss_chunks=tc.n_loss_chunks
+        )
+
+    def train_step(params, opt_state, comp_state, batch, step):
+        if tc.grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            a = tc.grad_accum
+
+            def split(x):
+                # STRIDED microbatching: microbatch m takes rows [m::a] so
+                # every data shard contributes rows to every microbatch.  A
+                # contiguous reshape would place each microbatch on B/(a*dp)
+                # shards and the partitioner would involuntarily replicate
+                # (probe-verified 8x compute blowup).
+                x = x.reshape((x.shape[0] // a, a) + x.shape[1:])
+                return jnp.swapaxes(x, 0, 1)
+
+            micro = jax.tree.map(split, batch)
+            if tc.microbatch_spec is not None:
+                mesh_, dax_ = tc.microbatch_spec
+
+                def _constrain(x):
+                    spec = P(None, dax_) if x.ndim >= 2 else P(None)
+                    return jax.lax.with_sharding_constraint(
+                        x, NamedSharding(mesh_, spec)
+                    )
+
+                micro = jax.tree.map(_constrain, micro)
+
+            def accum(carry, mb):
+                tot_loss, acc_g = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc_g = jax.tree.map(
+                    lambda x, y: x + y.astype(jnp.float32), acc_g, g
+                )
+                return (tot_loss + l, acc_g), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(accum, (jnp.float32(0.0), zeros), micro)
+            loss = loss / a
+            grads = jax.tree.map(lambda g: g / a, grads)
+
+        if tc.compression != "none":
+            grads, comp_state = compress_grads(
+                grads, comp_state, mode=tc.compression,
+                rng=jax.random.fold_in(jax.random.PRNGKey(17), step),
+            )
+
+        lr = cosine_schedule(
+            step, peak_lr=tc.peak_lr, warmup_steps=tc.warmup_steps,
+            total_steps=tc.total_steps,
+        )
+        params, opt_state, metrics = adamw_update(
+            grads, opt_state, params,
+            lr=lr, weight_decay=tc.weight_decay, clip_norm=tc.clip_norm,
+        )
+        metrics["loss"] = loss
+        return params, opt_state, comp_state, metrics
+
+    return train_step
+
+
+def jit_train_step(
+    model,
+    tc: TrainConfig,
+    mesh,
+    params_like,
+    *,
+    multi_pod: bool = False,
+    donate: bool = True,
+    policy: str = "tp_fsdp",
+):
+    """Shard + jit the train step against abstract params (dry-run-ready).
+
+    Returns (jitted_step, shardings) where shardings has keys
+    params/opt/comp/batch.
+    """
+    pfn = sharding.param_spec_fn(
+        mesh, multi_pod=multi_pod, policy=policy, cfg=model.cfg
+    )
+    bfn = sharding.batch_spec_fn(mesh, multi_pod=multi_pod, policy=policy)
+    if tc.grad_accum > 1 and tc.microbatch_spec is None:
+        mb_ax = sharding.data_axes(multi_pod)
+        if policy in ("fsdp", "fsdp2d", "dp"):
+            mb_ax = mb_ax + ("model",)
+        tc = tc._replace(microbatch_spec=(mesh, mb_ax))
+
+    param_sh = sharding.make_shardings(mesh, params_like, pfn)
+    opt_like = jax.eval_shape(adamw_init, params_like)
+    opt_sh = AdamWState(
+        count=NamedSharding(mesh, P()),
+        mu=sharding.make_shardings(mesh, opt_like.mu, pfn),
+        nu=sharding.make_shardings(mesh, opt_like.nu, pfn),
+    )
+    comp_like = jax.eval_shape(
+        functools.partial(compression_init, mode=tc.compression), params_like
+    )
+    comp_sh = (
+        None
+        if comp_like is None
+        else jax.tree.map(
+            lambda _: None, comp_like, is_leaf=lambda x: x is None
+        )
+    )
+    if comp_like is not None:
+        comp_sh = type(comp_like)(
+            residual=sharding.make_shardings(mesh, comp_like.residual, pfn)
+        )
+
+    step_fn = make_train_step(model, tc)
+
+    def batch_shardings(batch_like):
+        return sharding.make_shardings(mesh, batch_like, bfn)
+
+    def compile_for(batch_like):
+        b_sh = batch_shardings(batch_like)
+        return jax.jit(
+            step_fn,
+            in_shardings=(param_sh, opt_sh, comp_sh, b_sh, None),
+            out_shardings=(param_sh, opt_sh, comp_sh, None),
+            donate_argnums=(0, 1, 2) if donate else (),
+        )
+
+    return compile_for, {
+        "params": param_sh,
+        "opt": opt_sh,
+        "comp": comp_sh,
+        "batch_fn": batch_shardings,
+    }

@@ -1,0 +1,154 @@
+"""Algorithm-level tests: AMLA (Alg. 2) vs Base (Alg. 1) vs fp64 golden."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.amla import flash_attention_amla
+from repro.core.flash import flash_attention_base
+
+
+def golden_attention(q, k, v, scale, causal=False, window=None, softcap=None):
+    q, k, v = [np.asarray(x, np.float64) for x in (q, k, v)]
+    s = q @ k.T * scale
+    if softcap is not None:
+        s = softcap * np.tanh(s / softcap)
+    g, sk = s.shape
+    if causal or window is not None:
+        qp = np.arange(g)[:, None] + (sk - g)
+        kp = np.arange(sk)[None, :]
+        mask = np.ones_like(s, bool)
+        if causal:
+            mask &= kp <= qp
+        if window is not None:
+            mask &= kp > qp - window
+        s = np.where(mask, s, -np.inf)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    denom = p.sum(-1, keepdims=True)
+    denom[denom == 0] = 1.0
+    return (p / denom) @ v
+
+
+def rel_err(a, b):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    return np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-10)
+
+
+def make_inputs(g, s, dk, dv, sigma=1.0, seed=0, dist="normal"):
+    rng = np.random.default_rng(seed)
+    if dist == "normal":
+        q = rng.normal(0, sigma, (g, dk))
+        k = rng.normal(0, sigma, (s, dk))
+        v = rng.normal(0, sigma, (s, dv))
+    else:
+        q = rng.uniform(-sigma, sigma, (g, dk))
+        k = rng.uniform(-sigma, sigma, (s, dk))
+        v = rng.uniform(-sigma, sigma, (s, dv))
+    # BF16 inputs, as in the paper's experiments.
+    cast = lambda x: jnp.asarray(x, jnp.bfloat16).astype(jnp.float32)
+    return cast(q), cast(k), cast(v)
+
+
+MLA_DIMS = dict(g=32, s=2048, dk=576, dv=512)
+
+
+@pytest.mark.parametrize("sigma", [1.0, 4.0, 10.0])
+@pytest.mark.parametrize("dist", ["normal", "uniform"])
+def test_amla_matches_base_accuracy(sigma, dist):
+    """Paper Tables 3-4: AMLA accuracy ~= Base accuracy vs golden."""
+    q, k, v = make_inputs(**MLA_DIMS, sigma=sigma, dist=dist)
+    scale = 1.0 / np.sqrt(MLA_DIMS["dk"])
+    g = golden_attention(q, k, v, scale)
+    e_base = rel_err(flash_attention_base(q, k, v, scale=scale), g)
+    e_amla = rel_err(flash_attention_amla(q, k, v, scale=scale), g)
+    # At large sigma the softmax is near-one-hot and both errors sit at
+    # the 1e-5..1e-4 noise floor of the S16 quantisation (paper's own tables
+    # bottom out at 2e-4); require parity above that floor.
+    assert e_amla < max(2.0 * e_base, 2e-4), (e_base, e_amla)
+
+
+def test_error_compensation_helps():
+    """Appendix A ablation: removing compensation inflates the error."""
+    q, k, v = make_inputs(**MLA_DIMS, sigma=1.0)
+    scale = 1.0 / np.sqrt(MLA_DIMS["dk"])
+    g = golden_attention(q, k, v, scale)
+    e_comp = rel_err(flash_attention_amla(q, k, v, scale=scale), g)
+    e_nc = rel_err(
+        flash_attention_amla(q, k, v, scale=scale, error_compensation=False), g
+    )
+    assert e_comp < e_nc
+
+
+def test_int_add_equals_fp_mul_path():
+    """Lemma 3.1 at algorithm level: INT32-add path == exact-FP-mul path."""
+    q, k, v = make_inputs(**MLA_DIMS, sigma=2.0, seed=3)
+    scale = 1.0 / np.sqrt(MLA_DIMS["dk"])
+    a = flash_attention_amla(q, k, v, scale=scale, int_add=True)
+    b = flash_attention_amla(q, k, v, scale=scale, int_add=False)
+    # Not bit-identical: the mantissa-midpoint compensation (Appendix A) is
+    # approximate per element, and near-cancellation outputs amplify that
+    # relatively.  Require BF16-level agreement in combined abs+rel terms.
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=6e-3, atol=5e-3)
+    assert rel_err(a, b) < 1e-3
+
+
+@pytest.mark.parametrize("variant", ["base", "amla"])
+@pytest.mark.parametrize("block", [64, 128, 512])
+def test_block_size_invariance(variant, block):
+    q, k, v = make_inputs(g=16, s=1024, dk=128, dv=128, sigma=1.0, seed=7)
+    fn = flash_attention_base if variant == "base" else flash_attention_amla
+    scale = 1.0 / np.sqrt(128)
+    out = fn(q, k, v, scale=scale, block_size=block)
+    ref = fn(q, k, v, scale=scale, block_size=1024)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("variant", ["base", "amla"])
+def test_ragged_kv_padding(variant):
+    """Non-multiple-of-block KV lengths + explicit kv_len masking."""
+    q, k, v = make_inputs(g=8, s=700, dk=64, dv=64, seed=11)
+    fn = flash_attention_base if variant == "base" else flash_attention_amla
+    scale = 1.0 / 8.0
+    out = fn(q, k, v, scale=scale, block_size=256, kv_len=jnp.int32(600))
+    g = golden_attention(q[:, :], k[:600], v[:600], scale)
+    assert rel_err(out, g) < 5e-3
+
+
+@pytest.mark.parametrize("variant", ["base", "amla"])
+@pytest.mark.parametrize("window", [None, 64])
+def test_causal_and_window_masks(variant, window):
+    g_rows, s = 128, 512
+    q, k, v = make_inputs(g=g_rows, s=s, dk=64, dv=64, seed=5)
+    fn = flash_attention_base if variant == "base" else flash_attention_amla
+    scale = 1.0 / 8.0
+    q_pos = jnp.arange(g_rows, dtype=jnp.int32) + (s - g_rows)
+    out = fn(
+        q, k, v, scale=scale, block_size=128, q_pos=q_pos, causal=True, window=window
+    )
+    gref = golden_attention(q, k, v, scale, causal=True, window=window)
+    assert rel_err(out, gref) < 5e-3
+
+
+@pytest.mark.parametrize("variant", ["base", "amla"])
+def test_softcap(variant):
+    q, k, v = make_inputs(g=16, s=512, dk=64, dv=64, sigma=4.0, seed=9)
+    fn = flash_attention_base if variant == "base" else flash_attention_amla
+    scale = 1.0 / 8.0
+    out = fn(q, k, v, scale=scale, softcap=50.0)
+    gref = golden_attention(q, k, v, scale, softcap=50.0)
+    assert rel_err(out, gref) < 5e-3
+
+
+def test_fully_masked_rows_are_zero():
+    q, k, v = make_inputs(g=4, s=256, dk=32, dv=32, seed=13)
+    out = flash_attention_amla(q, k, v, scale=1.0, kv_len=jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_extreme_distributions_no_nan():
+    for sigma in [0.01, 100.0]:
+        q, k, v = make_inputs(g=8, s=512, dk=576, dv=512, sigma=sigma, seed=17)
+        out = flash_attention_amla(q, k, v, scale=1.0 / np.sqrt(576))
+        assert np.isfinite(np.asarray(out)).all()
+        g = golden_attention(q, k, v, 1.0 / np.sqrt(576))
+        assert rel_err(out, g) < 5e-2

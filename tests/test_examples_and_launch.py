@@ -1,0 +1,62 @@
+"""End-to-end tests of launch drivers and examples (CPU, smoke configs)."""
+
+import subprocess
+import sys
+
+import pytest
+
+
+def run_script(args, timeout=560):
+    r = subprocess.run(
+        [sys.executable] + args,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=".",
+    )
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    return r.stdout
+
+
+def test_train_driver_smoke():
+    out = run_script(
+        [
+            "-m", "repro.launch.train", "--arch", "qwen1.5-0.5b", "--smoke",
+            "--steps", "12", "--batch", "4", "--seq", "64", "--log-every", "4",
+        ]
+    )
+    assert "done: 12 steps" in out
+
+
+def test_train_driver_with_checkpointing(tmp_path):
+    out = run_script(
+        [
+            "-m", "repro.launch.train", "--arch", "gemma2-2b", "--smoke",
+            "--steps", "8", "--batch", "2", "--seq", "32",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "4",
+        ]
+    )
+    assert "finished at step" in out
+
+
+def test_serve_driver_smoke():
+    out = run_script(
+        [
+            "-m", "repro.launch.serve", "--arch", "qwen1.5-0.5b", "--smoke",
+            "--requests", "3", "--gen-len", "4", "--batch", "2",
+            "--max-len", "64",
+        ]
+    )
+    assert "served 3 requests" in out
+
+
+def test_example_long_context_decode():
+    out = run_script(["examples/long_context_decode.py"])
+    assert "rel err" in out
+
+
+@pytest.mark.slow
+def test_example_quickstart():
+    out = run_script(["examples/quickstart.py"], timeout=580)
+    assert "AMLA err" in out

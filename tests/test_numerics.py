@@ -1,0 +1,120 @@
+"""Property tests for the bit-level numerics (paper Lemma 3.1, Appendix A)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import numerics
+
+
+# ---------------------------------------------------------------------------
+# Lemma 3.1: F * 2^n == AS_FP32(AS_INT32(F) + n * 2^23) whenever 0 < E+n < 255.
+# ---------------------------------------------------------------------------
+@given(
+    f=st.floats(
+        min_value=2.0**-100,
+        max_value=2.0**100,
+        allow_nan=False,
+        allow_infinity=False,
+        width=32,
+    ),
+    sign=st.sampled_from([1.0, -1.0]),
+    n=st.integers(min_value=-60, max_value=60),
+)
+@settings(max_examples=300, deadline=None)
+def test_lemma_3_1_pow2_mul_by_add(f, sign, n):
+    x = np.float32(sign * f)
+    e = int(numerics.biased_exponent(jnp.float32(x)))
+    if not (0 < e + n < 255):  # outside the lemma's precondition
+        return
+    got = numerics.pow2_mul_by_add(jnp.float32(x), jnp.int32(n))
+    want = np.float32(x) * np.float32(2.0) ** np.int32(n)
+    # Bit-exact equality, not just allclose: the lemma is about bit patterns.
+    assert np.asarray(got, np.float32).tobytes() == np.float32(want).tobytes()
+
+
+@given(
+    f=st.floats(min_value=2.0**-100, max_value=2.0**100, allow_nan=False, width=32),
+    n=st.integers(min_value=-300, max_value=-120),
+)
+@settings(max_examples=100, deadline=None)
+def test_pow2_underflow_flushes_to_zero(f, n):
+    """Outside the lemma's range (E+n <= 0) the guarded primitive returns 0."""
+    x = jnp.float32(f)
+    e = int(numerics.biased_exponent(x))
+    if e + n > 0:
+        return
+    assert float(numerics.pow2_mul_by_add(x, jnp.int32(n))) == 0.0
+
+
+def test_pow2_zero_is_fixed_point():
+    for n in [-30, -1, 0, 1, 30]:
+        assert float(numerics.pow2_mul_by_add(jnp.float32(0.0), jnp.int32(n))) == 0.0
+        assert float(numerics.pow2_mul_by_add(jnp.float32(-0.0), jnp.int32(n))) == 0.0
+
+
+def test_pow2_negative_values():
+    x = jnp.float32(-3.1415)
+    got = numerics.pow2_mul_by_add(x, jnp.int32(-7))
+    np.testing.assert_array_equal(np.asarray(got), np.float32(-3.1415) * 2.0**-7)
+
+
+def test_pow2_vectorised_rows():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 128)), jnp.float32)
+    n = jnp.asarray([-3, -2, -1, 0, 0, -1, -2, -3], jnp.int32)[:, None]
+    got = numerics.pow2_mul_by_add(x, n)
+    want = np.asarray(x) * (2.0 ** np.asarray(n, np.float64))
+    np.testing.assert_allclose(np.asarray(got), want.astype(np.float32), rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# round_scale_to_pow2: exp(-m) == 2^n / inv_r with inv_r in [1/sqrt2, sqrt2].
+# ---------------------------------------------------------------------------
+@given(m=st.floats(min_value=-80000.0, max_value=80000.0, width=32))
+@settings(max_examples=200, deadline=None)
+def test_round_scale_split(m):
+    n, inv_r = numerics.round_scale_to_pow2(jnp.float32(m))
+    inv_r = float(inv_r)
+    # FP32 evaluation of n*ln2 + m cancels catastrophically for huge |m|;
+    # the resulting deviation is self-consistent inside AMLA (the same S16 is
+    # used for scaling P and for the final divide), so only fp32-level bounds
+    # are required here.
+    slack = 1e-3 + abs(m) * 2.4e-7
+    assert 1 / np.sqrt(2) * (1 - slack) <= inv_r <= np.sqrt(2) * (1 + slack)
+    # exp(m) * inv_r ~= 2^n  (checked in log space for huge ranges)
+    lhs = np.log2(max(inv_r, 1e-30)) - m / numerics.LN2
+    assert abs(lhs - float(n)) < 0.02 + abs(m) * 4e-7
+
+
+# ---------------------------------------------------------------------------
+# Compensated increment: *2^d*(1+eps) via a single int add (Appendix A).
+# ---------------------------------------------------------------------------
+@given(
+    f=st.floats(min_value=2.0**-10, max_value=1024.0, width=32),
+    d=st.integers(min_value=-10, max_value=0),
+    eps=st.floats(min_value=-0.00390625, max_value=0.00390625, width=32),
+)
+@settings(max_examples=200, deadline=None)
+def test_compensated_increment_accuracy(f, d, eps):
+    x = jnp.float32(f)
+    inc = numerics.pow2_int_increment(jnp.int32(d), jnp.float32(eps))
+    got = float(numerics.apply_int_increment(x, inc))
+    want = f * 2.0**d * (1.0 + eps)
+    # Appendix A: the mantissa-midpoint approximation is accurate to ~2^-9
+    # relative for |eps| < 1/256.
+    assert got == pytest.approx(want, rel=4e-3)
+
+
+def test_apply_increment_keeps_zero():
+    inc = numerics.pow2_int_increment(jnp.int32(-3), None)
+    x = jnp.zeros((4,), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(numerics.apply_int_increment(x, inc)), 0.0)
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = numerics.softcap(x, 50.0)
+    assert float(jnp.max(jnp.abs(y))) <= 50.0
+    np.testing.assert_allclose(np.asarray(y[50]), 0.0, atol=1e-6)

@@ -1,0 +1,131 @@
+"""Correctness tests for the §Perf optimisation paths."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.distributed import gqa_split_kv_decode
+from repro.models.mla_layer import mla_apply, mla_init
+from repro.models.model_zoo import build_model
+from repro.runtime.mesh_ctx import mesh_ctx
+
+
+def rel_err(a, b):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    return np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-10)
+
+
+def test_mla_expanded_equals_absorbed():
+    """Non-absorbed (training) MLA == absorbed MLA (the 104x cell-D fix)."""
+    cfg_e = get_config("deepseek-v2-mla", smoke=True)
+    cfg_a = dataclasses.replace(cfg_e, mla_absorbed_train=True)
+    params = mla_init(jax.random.PRNGKey(0), cfg_e)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg_e.d_model)) * 0.1
+    pos = jnp.broadcast_to(jnp.arange(16), (2, 16))
+    y_e, _ = mla_apply(params, x, cfg=cfg_e, positions=pos, dtype=jnp.float32)
+    y_a, _ = mla_apply(params, x, cfg=cfg_a, positions=pos, dtype=jnp.float32)
+    assert rel_err(y_e, y_a) < 5e-3
+
+
+@pytest.mark.parametrize("kv_layout", ["bshd", "bhsd"])
+def test_gqa_split_kv_decode_matches_monolithic(kv_layout):
+    """shard_map split-KV (cell-A fix) == plain attention, 1-device mesh."""
+    from repro.core.attention import multi_head_attention
+
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    b, sq, hq, hkv, dh, s = 2, 1, 8, 2, 32, 256
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, sq, hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, dh)), jnp.float32)
+    kv_len = jnp.asarray([s, 100], jnp.int32)
+    q_off = kv_len - sq
+    kk = k.swapaxes(1, 2) if kv_layout == "bhsd" else k
+    vv = v.swapaxes(1, 2) if kv_layout == "bhsd" else v
+    out = gqa_split_kv_decode(
+        q, kk, vv, mesh=mesh, seq_axis="model", batch_axes=("data",),
+        variant="amla", scale=1 / np.sqrt(dh), kv_len=kv_len, q_offset=q_off,
+        kv_layout=kv_layout,
+    )
+    ref = multi_head_attention(
+        q, k, v, impl="naive", scale=1 / np.sqrt(dh), kv_len=kv_len,
+        q_offset=q_off, causal=True,
+    )
+    assert rel_err(out, ref) < 5e-3
+
+
+def test_bhsd_cache_decode_matches_bshd():
+    """Cache-layout knob: bhsd decode == bshd decode, token by token."""
+    base = get_config("qwen2.5-3b", smoke=True)
+    cfg_b = dataclasses.replace(base, cache_layout="bhsd")
+    m1, m2 = build_model(base), build_model(cfg_b)
+    params = m1.init(jax.random.PRNGKey(0))
+    b, s = 1, 10
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, base.vocab_size)
+    c1 = m1.init_cache(params, b, 32)
+    c2 = m2.init_cache(params, b, 32)
+    for t in range(s):
+        l1, c1 = m1.decode_step(
+            params, c1, tokens[:, t : t + 1], jnp.int32(t)  # scalar position
+        )
+        l2, c2 = m2.decode_step(params, c2, tokens[:, t : t + 1], jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(l1, np.float32), np.asarray(l2, np.float32),
+            rtol=2e-2, atol=2e-2,
+        )
+
+
+def test_scalar_cache_len_matches_vector():
+    cfg = get_config("gemma2-2b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b = 2
+    tok = jax.random.randint(jax.random.PRNGKey(2), (b, 1), 0, cfg.vocab_size)
+    c1 = model.init_cache(params, b, 16)
+    c2 = model.init_cache(params, b, 16)
+    l1, _ = model.decode_step(params, c1, tok, jnp.int32(3))
+    l2, _ = model.decode_step(params, c2, tok, jnp.full((b,), 3, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(l1, np.float32), np.asarray(l2, np.float32), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_moe_constraints_safe_without_mesh():
+    """mesh_ctx unset: MoE runs with no sharding constraints (CPU tests)."""
+    cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab_size),
+    }
+    hidden, aux = model.forward(params, batch)
+    assert np.isfinite(np.asarray(hidden, np.float32)).all()
+
+
+def test_seqkv_policy_in_mesh_ctx_single_device():
+    """End-to-end decode under mesh_ctx(seqkv) on a 1x1 mesh == plain."""
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b = 1
+    tok = jax.random.randint(jax.random.PRNGKey(3), (b, 1), 0, cfg.vocab_size)
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+    c1 = model.init_cache(params, b, 16)
+    l_plain, _ = model.decode_step(params, c1, tok, jnp.int32(4))
+    c2 = model.init_cache(params, b, 16)
+    with mesh_ctx(mesh, "seqkv", False):
+        l_seqkv, _ = model.decode_step(params, c2, tok, jnp.int32(4))
+    np.testing.assert_allclose(
+        np.asarray(l_plain, np.float32), np.asarray(l_seqkv, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )

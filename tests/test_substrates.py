@@ -1,0 +1,192 @@
+"""Tests for data pipeline, optimizer, compression, checkpointing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.data.pipeline import IGNORE, SyntheticLMData
+from repro.optim.adamw import (
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+from repro.optim.compression import compress_grads, compression_init
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+def test_data_determinism_and_resume():
+    d = SyntheticLMData(vocab_size=1000, seq_len=128, global_batch=8, seed=3)
+    b1 = d.batch_at(42)
+    b2 = d.batch_at(42)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(b1["tokens"], d.batch_at(43)["tokens"])
+
+
+def test_data_sharding_partitions_batch():
+    full = SyntheticLMData(vocab_size=100, seq_len=32, global_batch=8, seed=0)
+    shards = [
+        SyntheticLMData(
+            vocab_size=100, seq_len=32, global_batch=8, seed=0,
+            num_shards=4, shard_id=i,
+        )
+        for i in range(4)
+    ]
+    assert all(s.local_batch == 2 for s in shards)
+    # Shards are mutually distinct streams.
+    b0 = shards[0].batch_at(0)["tokens"]
+    b1 = shards[1].batch_at(0)["tokens"]
+    assert not np.array_equal(b0, b1)
+    del full
+
+
+def test_data_labels_shifted_and_masked():
+    d = SyntheticLMData(vocab_size=50, seq_len=64, global_batch=2, seed=1)
+    b = d.batch_at(0)
+    assert (b["labels"][:, -1] == IGNORE).all()
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 50
+
+
+def test_data_prefetch_iterator():
+    d = SyntheticLMData(vocab_size=50, seq_len=16, global_batch=2, seed=1)
+    it = d.iterate(start_step=5)
+    step, batch = next(it)
+    assert step == 5
+    np.testing.assert_array_equal(batch["tokens"], d.batch_at(5)["tokens"])
+    step, _ = next(it)
+    assert step == 6
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_minimises_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0]), "b": jnp.asarray([2.0])}
+    state = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    for step in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(
+            g, state, params, lr=jnp.float32(0.05), weight_decay=0.0
+        )
+    assert float(loss(params)) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lrs = [
+        float(
+            cosine_schedule(
+                jnp.int32(s), peak_lr=1.0, warmup_steps=10, total_steps=100
+            )
+        )
+        for s in [0, 5, 10, 55, 100]
+    ]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0.1 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1, rel=1e-3)
+
+
+def test_weight_decay_only_on_matrices():
+    params = {"w": jnp.ones((2, 2)), "scale": jnp.ones((2,))}
+    state = adamw_init(params)
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    new_p, _, _ = adamw_update(
+        zero_g, state, params, lr=jnp.float32(0.1), weight_decay=0.5, clip_norm=None
+    )
+    assert float(new_p["w"][0, 0]) < 1.0  # decayed
+    assert float(new_p["scale"][0]) == 1.0  # not decayed
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["bf16", "int8"])
+def test_compression_error_feedback_unbiased(mode):
+    params = {"w": jnp.zeros((64,))}
+    state = compression_init(params, mode)
+    rng = jax.random.PRNGKey(0)
+    g_true = jax.random.normal(rng, (64,)) * 1e-3  # small grads stress rounding
+    total_c = jnp.zeros((64,))
+    n = 50
+    for i in range(n):
+        gc, state = compress_grads(
+            {"w": g_true}, state, mode=mode, rng=jax.random.fold_in(rng, i)
+        )
+        total_c = total_c + gc["w"]
+    # Error feedback ensures the *sum* of compressed grads tracks the sum of
+    # true grads (residual bounded by one quantisation step).
+    err = jnp.linalg.norm(total_c - n * g_true) / jnp.linalg.norm(n * g_true)
+    assert float(err) < 0.05, float(err)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+def _state():
+    return {
+        "params": {"w": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3)},
+        "opt": adamw_init({"w": jnp.zeros((2, 3))}),
+        "step": jnp.int32(7),
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = _state()
+    mgr.save(10, state)
+    step, restored = mgr.restore_latest(state)
+    assert step == 10
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"], np.float32),
+        np.asarray(state["params"]["w"], np.float32),
+    )
+    assert restored["params"]["w"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = _state()
+    for s in [1, 2, 3, 4]:
+        mgr.save(s, state)
+    assert mgr.committed_steps() == [3, 4]
+
+
+def test_checkpoint_ignores_uncommitted(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    state = _state()
+    mgr.save(5, state)
+    # Simulate a crash mid-write: directory without COMMIT marker.
+    bad = os.path.join(str(tmp_path), "step_00000009")
+    os.makedirs(bad)
+    with open(os.path.join(bad, "shard_00000.npz"), "wb") as f:
+        f.write(b"garbage")
+    step, _ = mgr.restore_latest(state)
+    assert step == 5
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+    state = _state()
+    mgr.save(3, state)
+    mgr.wait()
+    assert mgr.committed_steps() == [3]
