@@ -1,0 +1,112 @@
+"""Paged vs contiguous MLA decode: latency + memory-efficiency comparison.
+
+    PYTHONPATH=src python -m benchmarks.paged_decode [--full]
+
+Two numbers matter for serving:
+
+* **step latency** — the paged kernel's block-table gather must not cost
+  wall-clock vs the contiguous kernel (on TPU the gather rides the grid
+  pipeline's prefetch; in interpret mode on CPU both paths pay the same
+  python-level tax, so treat CPU ratios as smoke only).
+* **pool efficiency** — contiguous slots reserve ``max_len`` rows per
+  request; pages waste at most ``page_size - 1`` rows per request.  The CSV
+  reports both so the ROADMAP's serving claims are backed by a number.
+
+Output is CSV (``name,value,...``) like every other benchmarks/ section.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.runtime.kv_cache import PagedKVCache
+
+
+def _on_tpu() -> bool:
+    return any(d.platform == "tpu" for d in jax.devices())
+
+
+def _time(fn, iters: int) -> float:
+    fn()  # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e3
+
+
+def run(full: bool = False) -> None:
+    interpret = not _on_tpu()
+    if full:
+        b, hq, dk, dv, page, max_len = 8, 128, 576, 512, 128, 8192
+        iters = 20
+    else:  # interpret-friendly smoke geometry
+        b, hq, dk, dv, page, max_len = 2, 8, 576, 512, 128, 1024
+        iters = 2
+
+    rng = np.random.default_rng(0)
+    kv_lens = [int(x) for x in rng.integers(max_len // 4, max_len, b)]
+    scale = 1.0 / dk**0.5
+    q = jnp.asarray(rng.normal(0, 0.3, (b, 1, hq, dk)), jnp.bfloat16)
+    c = jnp.asarray(rng.normal(0, 0.3, (b, max_len, dk)), jnp.bfloat16)
+    kv_len = jnp.asarray(kv_lens, jnp.int32)
+
+    kv = PagedKVCache(
+        num_pages=sum(-(-l // page) for l in kv_lens) + 1,
+        page_size=page,
+        width=dk,
+    )
+    for rid, l in enumerate(kv_lens):
+        kv.alloc(rid)
+        kv.append(rid, c[rid, :l])
+    bt, _ = kv.block_table(list(range(b)))
+    bt = jnp.asarray(bt)
+
+    def contiguous():
+        return ops.mla_decode(
+            q, c, d_v=dv, scale=scale, kv_len=kv_len, interpret=interpret
+        )
+
+    def paged():
+        return ops.mla_decode_paged(
+            q, kv.pages, bt, kv_len, d_v=dv, scale=scale, interpret=interpret
+        )
+
+    max_abs = float(jnp.max(jnp.abs(paged() - contiguous())))
+    ms_contig = _time(contiguous, iters)
+    ms_paged = _time(paged, iters)
+
+    # memory: rows resident on device to serve this batch
+    contig_rows = b * max_len
+    paged_rows = kv.num_pages * page
+    used_rows = sum(kv_lens)
+
+    mode = "tpu" if not interpret else "cpu-interpret"
+    print(f"paged_decode,mode,{mode},b,{b},hq,{hq},page,{page}")
+    print(f"paged_decode,max_abs_diff,{max_abs:.3e}")
+    print(
+        f"paged_decode,ms_contiguous,{ms_contig:.3f},ms_paged,{ms_paged:.3f},"
+        f"ratio,{ms_paged / ms_contig:.3f}"
+    )
+    print(
+        f"paged_decode,rows_contiguous,{contig_rows},rows_paged,{paged_rows},"
+        f"rows_used,{used_rows},pool_util,{used_rows / paged_rows:.3f},"
+        f"contig_util,{used_rows / contig_rows:.3f}"
+    )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--full",
+        action="store_true",
+        help="serving-scale geometry (TPU); default is an interpret-safe smoke",
+    )
+    args = ap.parse_args()
+    run(full=args.full)

@@ -6,6 +6,7 @@ Sections:
   [T2]  arithmetic intensity (paper Table 2 / Fig. 1)
   [T3/T4] accuracy vs golden (paper Tables 3-4) + compensation ablations
   [T5]  kernel FLOPS-utilisation model (paper Table 5 / Fig. 10)
+  [PAGED] paged vs contiguous decode latency + pool efficiency
   [ROOFLINE] per-(arch x shape x mesh) dry-run roofline table (assignment)
 
 Each section prints CSV (``name,value,...``) so downstream tooling can diff.
@@ -24,7 +25,8 @@ def section(name):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip", nargs="*", default=[],
-                    choices=["accuracy", "intensity", "kernel", "roofline"])
+                    choices=["accuracy", "intensity", "kernel", "roofline",
+                             "paged"])
     ap.add_argument("--dryrun-dir", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -46,6 +48,12 @@ def main() -> None:
 
         section("T3/T4 accuracy vs golden")
         accuracy.run()
+
+    if "paged" not in args.skip:
+        from benchmarks import paged_decode
+
+        section("PAGED paged vs contiguous decode")
+        paged_decode.run()
 
     if "roofline" not in args.skip:
         from benchmarks import roofline_bench

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import jax_compat
 from repro.core.amla import flash_attention_amla
 from repro.core.flash import flash_attention_base
 
@@ -81,7 +82,7 @@ def seq_parallel_decode(
         ls = jax.lax.all_gather(l, axis_name)
         return combine_partials(accs, ms, ls)
 
-    return jax.shard_map(
+    return jax_compat.shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(P(), P(axis_name), P(axis_name)),
@@ -174,7 +175,7 @@ def gqa_split_kv_decode(
     kv_spec = (
         P(bspec, None, seq_axis) if kv_layout == "bhsd" else P(bspec, seq_axis)
     )
-    out = jax.shard_map(
+    out = jax_compat.shard_map(
         shard_body,
         mesh=mesh,
         in_specs=(P(bspec), kv_spec, kv_spec, P(bspec), P(bspec)),
@@ -221,7 +222,7 @@ def seq_parallel_decode_batched(
 
     if kv_len is None:
         kv_len = jnp.full((q.shape[0],), s_total, jnp.int32)
-    return jax.shard_map(
+    return jax_compat.shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(P(), P(None, axis_name), P(None, axis_name), P()),

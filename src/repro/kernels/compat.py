@@ -1,0 +1,16 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and back
+again across 0.4.x/0.5.x releases).  Every kernel module imports the name from
+here so the repo runs on whichever jax the environment bakes in.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+if CompilerParams is None:  # pragma: no cover - very old jax
+    raise ImportError("no Pallas TPU CompilerParams class found in this jax")

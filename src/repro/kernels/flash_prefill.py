@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 from repro.core import numerics
 
 DEFAULT_BLOCK_Q = 256
@@ -219,7 +221,7 @@ def flash_prefill(
         out_shape=jax.ShapeDtypeStruct(
             (b, hq, q.shape[2], v.shape[-1]), jnp.float32
         ),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

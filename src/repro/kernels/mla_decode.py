@@ -30,9 +30,110 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 from repro.core import numerics
 
 DEFAULT_BLOCK_K = 512
+
+
+def decode_state_scratch(g: int, d_v: int) -> list:
+    """VMEM scratch carried across the KV grid dimension by decode kernels.
+
+    Order matches the ``*state_refs`` convention of :func:`init_decode_state`
+    / :func:`decode_block_update` / :func:`finalize_decode`:
+    ``acc (G, Dv) f32, m (G, 1) f32, l (G, 1) f32, n (G, 1) i32,
+    gamma (G, 1) f32, s16 (G, 1) f32`` (the last three are AMLA-only but
+    allocated regardless; cheap).
+    """
+    return [
+        pltpu.VMEM((g, d_v), jnp.float32),
+        pltpu.VMEM((g, 1), jnp.float32),
+        pltpu.VMEM((g, 1), jnp.float32),
+        pltpu.VMEM((g, 1), jnp.int32),
+        pltpu.VMEM((g, 1), jnp.float32),
+        pltpu.VMEM((g, 1), jnp.float32),
+    ]
+
+
+def init_decode_state(acc_ref, m_ref, l_ref, n_ref, gamma_ref, s16_ref):
+    """Reset the online-softmax state at the first KV grid step."""
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    m_ref[...] = jnp.full_like(m_ref, numerics.M_INIT)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    n0, inv_r0 = numerics.round_scale_to_pow2(
+        jnp.full_like(m_ref, numerics.M_INIT)
+    )
+    n_ref[...] = n0
+    gamma_ref[...] = jnp.ones_like(gamma_ref)
+    s16_ref[...] = numerics.bf16_round(inv_r0)
+
+
+def decode_block_update(
+    s,  # (G, Bk) f32 masked scores
+    c_blk,  # (Bk, Dk) latent block; V = first d_v columns
+    acc_ref, m_ref, l_ref, n_ref, gamma_ref, s16_ref,
+    *,
+    d_v: int,
+    variant: str,
+    mm_dtype,
+):
+    """One KV-block online-softmax update shared by the contiguous and paged
+    decode kernels.
+
+    ``variant == "amla"`` applies the paper's MUL-by-ADD rescale
+    (``numerics.pow2_int_increment`` / ``apply_int_increment``), skipped
+    entirely when the increment is all-zero; ``"base"`` is Algorithm 1's
+    FP32-multiply rescale on every block.
+    """
+    # [V1] (VPU): online softmax + power-of-two scale split.
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * jnp.exp(m_prev - m_new) + jnp.sum(
+        p, axis=1, keepdims=True
+    )
+    m_ref[...] = m_new
+
+    if variant == "amla":
+        n_new, inv_r32 = numerics.round_scale_to_pow2(m_new)
+        s16 = numerics.bf16_round(inv_r32)
+        gamma_new = inv_r32 / s16
+        eps = gamma_ref[...] / gamma_new - 1.0
+        inc = numerics.pow2_int_increment(n_new - n_ref[...], eps)
+        n_ref[...] = n_new
+        gamma_ref[...] = gamma_new
+        s16_ref[...] = s16
+        p_mm = (p * s16).astype(mm_dtype)
+
+        # MUL-by-ADD rescale, skipped when the increment is all-zero
+        # (the [V2]-elimination at the heart of the paper).
+        @pl.when(jnp.any(inc != 0))
+        def _rescale():
+            acc_ref[...] = numerics.apply_int_increment(acc_ref[...], inc)
+
+    else:  # base: Algorithm 1's FP32-multiply rescale, every block
+        alpha = jnp.exp(m_prev - m_new)
+        acc_ref[...] = acc_ref[...] * alpha
+        p_mm = p.astype(mm_dtype)
+
+    # [C2] (MXU): T = P V with V = first d_v columns of the latent block.
+    t = jax.lax.dot_general(
+        p_mm,
+        c_blk[..., :d_v],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] = acc_ref[...] + t
+
+
+def finalize_decode(o_ref, acc_ref, l_ref, s16_ref, *, variant: str):
+    """Divide out the softmax denominator (and S16 for AMLA) into ``o_ref``."""
+    l = l_ref[...]
+    denom = l * s16_ref[...] if variant == "amla" else l
+    safe = jnp.where(denom > 0, denom, 1.0)
+    out = jnp.where(denom > 0, acc_ref[...] / safe, 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
 
 
 def _mla_decode_kernel(
@@ -63,15 +164,7 @@ def _mla_decode_kernel(
 
     @pl.when(i == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, numerics.M_INIT)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        n0, inv_r0 = numerics.round_scale_to_pow2(
-            jnp.full_like(m_ref, numerics.M_INIT)
-        )
-        n_ref[...] = n0
-        gamma_ref[...] = jnp.ones_like(gamma_ref)
-        s16_ref[...] = numerics.bf16_round(inv_r0)
+        init_decode_state(acc_ref, m_ref, l_ref, n_ref, gamma_ref, s16_ref)
 
     k_len = kv_len_ref[b]
     start = i * block_k
@@ -79,9 +172,10 @@ def _mla_decode_kernel(
     @pl.when(start < k_len)
     def _compute():
         # [C1] (MXU): S = Q c^T over the full 576-wide latent+rope key.
+        c_blk = c_ref[...]
         s = jax.lax.dot_general(
             q_ref[...],
-            c_ref[...],
+            c_blk,
             (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
@@ -95,53 +189,15 @@ def _mla_decode_kernel(
         mask = (k_pos < k_len) & (k_pos <= q_pos[:, None])
         s = jnp.where(mask, s, -jnp.inf)
 
-        # [V1] (VPU): online softmax + power-of-two scale split.
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        l_ref[...] = l_ref[...] * jnp.exp(m_prev - m_new) + jnp.sum(
-            p, axis=1, keepdims=True
+        decode_block_update(
+            s, c_blk,
+            acc_ref, m_ref, l_ref, n_ref, gamma_ref, s16_ref,
+            d_v=d_v, variant=variant, mm_dtype=q_ref.dtype,
         )
-        m_ref[...] = m_new
-
-        if variant == "amla":
-            n_new, inv_r32 = numerics.round_scale_to_pow2(m_new)
-            s16 = numerics.bf16_round(inv_r32)
-            gamma_new = inv_r32 / s16
-            eps = gamma_ref[...] / gamma_new - 1.0
-            inc = numerics.pow2_int_increment(n_new - n_ref[...], eps)
-            n_ref[...] = n_new
-            gamma_ref[...] = gamma_new
-            s16_ref[...] = s16
-            p_mm = (p * s16).astype(q_ref.dtype)
-
-            # MUL-by-ADD rescale, skipped when the increment is all-zero
-            # (the [V2]-elimination at the heart of the paper).
-            @pl.when(jnp.any(inc != 0))
-            def _rescale():
-                acc_ref[...] = numerics.apply_int_increment(acc_ref[...], inc)
-
-        else:  # base: Algorithm 1's FP32-multiply rescale, every block
-            alpha = jnp.exp(m_prev - m_new)
-            acc_ref[...] = acc_ref[...] * alpha
-            p_mm = p.astype(q_ref.dtype)
-
-        # [C2] (MXU): T = P V with V = first d_v columns of the latent block.
-        t = jax.lax.dot_general(
-            p_mm,
-            c_ref[..., :d_v],
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        acc_ref[...] = acc_ref[...] + t
 
     @pl.when(i == pl.num_programs(1) - 1)
     def _finalize():
-        l = l_ref[...]
-        denom = l * s16_ref[...] if variant == "amla" else l
-        safe = jnp.where(denom > 0, denom, 1.0)
-        out = jnp.where(denom > 0, acc_ref[...] / safe, 0.0)
-        o_ref[...] = out.astype(o_ref.dtype)
+        finalize_decode(o_ref, acc_ref, l_ref, s16_ref, variant=variant)
 
 
 @functools.partial(
@@ -185,14 +241,7 @@ def mla_decode_rows(
             pl.BlockSpec((None, block_k, d_k), lambda bb, ii, *_: (bb, ii, 0)),
         ],
         out_specs=pl.BlockSpec((None, g, d_v), lambda bb, ii, *_: (bb, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((g, d_v), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.int32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-        ],
+        scratch_shapes=decode_state_scratch(g, d_v),
     )
     kernel = functools.partial(
         _mla_decode_kernel,
@@ -206,7 +255,7 @@ def mla_decode_rows(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, g, d_v), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,189 @@
+"""Pallas TPU kernel: paged MLA decode — AMLA over a block-table KV cache.
+
+Serving-side twin of :mod:`repro.kernels.mla_decode`.  Instead of one
+contiguous ``(B, S, 576)`` latent cache, the latents live in a shared pool of
+fixed-size pages ``(num_pages, page_size, 576)`` and each request owns an
+ordered list of physical page ids (its *block table*, see
+``runtime/kv_cache.PagedKVCache``).  The kernel walks each request's logical
+pages on the sequential grid dimension and resolves logical → physical via a
+scalar-prefetched block table: the page id feeds the input ``index_map``, so
+Mosaic's grid pipeline DMAs the right physical page into VMEM one step ahead,
+exactly like the contiguous kernel's next-block prefetch — gather costs
+nothing extra on the data path.
+
+The per-block online-softmax state machine (init / update / finalize,
+including the AMLA MUL-by-ADD rescale via ``numerics.pow2_int_increment`` /
+``apply_int_increment`` and its skip-when-zero fast path) is shared verbatim
+with the contiguous kernel through the helpers in ``mla_decode``.
+
+Page size default is 128: pages are lane-tile aligned (bf16 second-minor
+tiling is 16, f32 is 8) and 4 pages make up the paper's §4.2 KV block of 512,
+so the AMLA rescale-skip statistics are at least as good as the contiguous
+kernel's (more, smaller blocks ⇒ the running max crosses a power-of-two
+boundary in a *smaller* fraction of updates).  Smaller pages cut allocation
+slack for ragged serving batches at the cost of more grid steps; 128 is the
+floor where the (G×128×576) score matmul still fills the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+from repro.core import numerics
+from repro.kernels import mla_decode as _mla
+
+DEFAULT_PAGE_SIZE = 128
+
+
+def _mla_decode_paged_kernel(
+    # scalar prefetch
+    kv_len_ref,  # (B,) int32
+    q_pos_ref,  # (B, G) int32 absolute positions per query row
+    block_table_ref,  # (B, W) int32 logical page -> physical page id
+    # inputs
+    q_ref,  # (G, Dk) bf16
+    page_ref,  # (page_size, Dk) bf16  (physical page selected by index_map)
+    # outputs
+    o_ref,  # (G, Dv)
+    # scratch
+    acc_ref,
+    m_ref,
+    l_ref,
+    n_ref,
+    gamma_ref,
+    s16_ref,
+    *,
+    scale: float,
+    d_v: int,
+    variant: str,
+    page_size: int,
+    softcap: float | None,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        _mla.init_decode_state(acc_ref, m_ref, l_ref, n_ref, gamma_ref, s16_ref)
+
+    k_len = kv_len_ref[b]
+    start = i * page_size
+
+    # Pages past the request's length are skipped entirely (their DMA still
+    # lands — index_map points it at page 0 — but no FLOPs are spent).
+    @pl.when(start < k_len)
+    def _compute():
+        c_blk = page_ref[...]
+        s = jax.lax.dot_general(
+            q_ref[...],
+            c_blk,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        s = s * jnp.float32(scale)
+        if softcap is not None:
+            s = numerics.softcap(s, softcap)
+        s = jnp.clip(s, -numerics.M_CLAMP, numerics.M_CLAMP)
+
+        k_pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        q_pos = q_pos_ref[b]  # (G,)
+        mask = (k_pos < k_len) & (k_pos <= q_pos[:, None])
+        s = jnp.where(mask, s, -jnp.inf)
+
+        _mla.decode_block_update(
+            s, c_blk,
+            acc_ref, m_ref, l_ref, n_ref, gamma_ref, s16_ref,
+            d_v=d_v, variant=variant, mm_dtype=q_ref.dtype,
+        )
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _finalize():
+        _mla.finalize_decode(o_ref, acc_ref, l_ref, s16_ref, variant=variant)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "d_v",
+        "variant",
+        "scale",
+        "softcap",
+        "interpret",
+    ),
+)
+def mla_decode_paged_rows(
+    q: jax.Array,  # (B, G, Dk)
+    kv_pages: jax.Array,  # (P, page_size, Dk) physical page pool
+    block_tables: jax.Array,  # (B, W) int32
+    kv_len: jax.Array,  # (B,) int32
+    q_pos: jax.Array,  # (B, G) int32
+    *,
+    d_v: int = 512,
+    variant: str = "amla",
+    scale: float,
+    softcap: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Row-level paged decode; see ops.mla_decode_paged for the (B,Sq,H,D) API.
+
+    ``W = block_tables.shape[1]`` logical pages are walked per request;
+    requests shorter than ``W * page_size`` mask the tail via ``kv_len``
+    (entries past a request's last page may be arbitrary in-range ids —
+    they are clamped here and their compute is skipped).  A request with
+    ``kv_len == 0`` (inactive serving slot) yields exact zeros.
+    """
+    b, g, d_k = q.shape
+    num_pages, page_size, _ = kv_pages.shape
+    w = block_tables.shape[1]
+    if w < 1:
+        raise ValueError("block_tables must have at least one page column")
+    # Keep every gathered id in-range so skipped steps DMA a real page.
+    block_tables = jnp.clip(block_tables.astype(jnp.int32), 0, num_pages - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, w),
+        in_specs=[
+            pl.BlockSpec((None, g, d_k), lambda bb, ii, *_: (bb, 0, 0)),
+            pl.BlockSpec(
+                (None, page_size, d_k),
+                lambda bb, ii, kv_len_ref, q_pos_ref, bt_ref: (
+                    bt_ref[bb, ii],
+                    0,
+                    0,
+                ),
+            ),
+        ],
+        out_specs=pl.BlockSpec((None, g, d_v), lambda bb, ii, *_: (bb, 0, 0)),
+        scratch_shapes=_mla.decode_state_scratch(g, d_v),
+    )
+    kernel = functools.partial(
+        _mla_decode_paged_kernel,
+        scale=scale,
+        d_v=d_v,
+        variant=variant,
+        page_size=page_size,
+        softcap=softcap,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, g, d_v), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        kv_len.astype(jnp.int32),
+        q_pos.astype(jnp.int32),
+        block_tables,
+        q,
+        kv_pages,
+    )

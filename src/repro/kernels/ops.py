@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from repro.kernels import flash_prefill as _prefill
 from repro.kernels import gqa_decode as _gqa
 from repro.kernels import mla_decode as _mla
+from repro.kernels import mla_decode_paged as _mla_paged
 
 
 def _default_pos(b, sq, kv_len, sk):
@@ -55,6 +56,52 @@ def mla_decode(
         variant=variant,
         scale=scale,
         block_k=block_k,
+        interpret=interpret,
+    )
+    return out.reshape(b, sq, hq, d_v)
+
+
+def mla_decode_paged(
+    q: jax.Array,  # (B, Sq, Hq, Dk)
+    kv_pages: jax.Array,  # (P, page_size, Dk) physical page pool
+    block_tables: jax.Array,  # (B, W) int32 logical -> physical page ids
+    kv_len: jax.Array,  # (B,) int32 valid tokens per request
+    *,
+    d_v: int = 512,
+    variant: str = "amla",
+    interpret: bool = False,
+    scale: float,
+    causal: bool = True,
+    q_offset: jax.Array | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    """MLA decode over a paged latent cache (see runtime.kv_cache).
+
+    Same contract as :func:`mla_decode` except the latent cache is addressed
+    through per-request block tables into a shared page pool; ``kv_len`` is
+    mandatory (it is what bounds each request's logical page walk).
+    """
+    b, sq, hq, dk = q.shape
+    kv_len = kv_len.astype(jnp.int32)
+    base = jnp.maximum(kv_len - sq, 0)
+    q_pos = base[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+    if q_offset is not None:
+        q_pos = q_offset[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+    if not causal:
+        cap = block_tables.shape[1] * kv_pages.shape[1]
+        q_pos = jnp.full((b, sq), cap, jnp.int32)  # no causal restriction
+    rows_pos = jnp.repeat(q_pos, hq, axis=1)  # (B, Sq*Hq)
+    q_rows = q.reshape(b, sq * hq, dk).astype(jnp.bfloat16)
+    out = _mla_paged.mla_decode_paged_rows(
+        q_rows,
+        kv_pages.astype(jnp.bfloat16),
+        block_tables,
+        kv_len,
+        rows_pos,
+        d_v=d_v,
+        variant=variant,
+        scale=scale,
+        softcap=softcap,
         interpret=interpret,
     )
     return out.reshape(b, sq, hq, d_v)

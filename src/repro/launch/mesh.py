@@ -8,19 +8,17 @@ import to obtain 512 placeholder devices.
 
 from __future__ import annotations
 
-import jax
+import jax  # noqa: F401  (kept for callers poking jax.devices)
+
+from repro.core import jax_compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax_compat.make_mesh(shape, axes)
 
 
 def make_debug_mesh():
     """1x1 mesh for single-device tests of the same code paths."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    return jax_compat.make_mesh((1, 1), ("data", "model"))

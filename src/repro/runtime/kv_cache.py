@@ -1,0 +1,191 @@
+"""Paged latent-KV cache: fixed-size pages + per-request block tables.
+
+The serving-side memory manager behind ``kernels.mla_decode_paged``.  One
+device-resident pool holds ``num_pages`` pages of ``page_size`` latent rows
+(each row is the 576-wide ``[c ; k_rope]`` vector of MLA — but any width
+works, so GQA K/V pools can reuse this class).  Requests own ordered lists of
+physical page ids; appending tokens allocates pages on demand, freeing a
+request returns its pages to the free list in O(1).  Because pages are
+fixed-size, per-request memory waste is bounded by one page, and admission
+control is a simple free-page count — the two properties contiguous
+per-slot caches (runtime.serve_loop.ServingSession) lack: there, every slot
+reserves ``max_len`` rows up front.
+
+Page bookkeeping (free list, page lists, lengths) is host-side Python —
+it is O(pages touched) per call and never enters a jit trace.  Only the page
+pool itself lives on device.
+
+Page size default follows ``kernels.mla_decode_paged.DEFAULT_PAGE_SIZE``
+(128): four pages per §4.2 KV block of 512, lane-tile aligned, small enough
+that ragged serving batches waste <1/8 of the pool at typical 1k contexts.
+"""
+
+from __future__ import annotations
+
+import functools
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.mla_decode_paged import DEFAULT_PAGE_SIZE
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_rows(pages, rows, pid, off):
+    """In-place-capable page write (buffer donation avoids a pool copy)."""
+    return jax.lax.dynamic_update_slice(
+        pages, rows[None].astype(pages.dtype), (pid, off, 0)
+    )
+
+
+class OutOfPagesError(RuntimeError):
+    """Raised when an append needs more pages than the pool has free."""
+
+
+class PagedKVCache:
+    """Block-table paged KV pool with alloc/free/append.
+
+    Parameters
+    ----------
+    num_pages:  total pages in the device pool.
+    page_size:  latent rows per page.
+    width:      row width (576 = 512 latent + 64 rope for DeepSeek MLA).
+    dtype:      storage dtype of the pool (bf16 in serving).
+    """
+
+    def __init__(
+        self,
+        *,
+        num_pages: int,
+        page_size: int = DEFAULT_PAGE_SIZE,
+        width: int = 576,
+        dtype=jnp.bfloat16,
+    ):
+        if num_pages < 1 or page_size < 1:
+            raise ValueError("need at least one page of at least one row")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.width = width
+        self.pages = jnp.zeros((num_pages, page_size, width), dtype)
+        # FIFO free list: freed pages are reused in release order, so a
+        # long-lived session naturally produces fragmented (non-contiguous,
+        # non-monotone) block tables — which the kernel must not care about.
+        self._free: deque[int] = deque(range(num_pages))
+        self._seq_pages: dict[int, list[int]] = {}
+        self._seq_len: dict[int, int] = {}
+
+    # ------------------------------------------------------------------ #
+    # bookkeeping
+    # ------------------------------------------------------------------ #
+    @property
+    def num_free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def pages_needed_for_append(self, rid: int | None, n_tokens: int) -> int:
+        """New pages an append of ``n_tokens`` to ``rid`` (or a new seq) grabs."""
+        used = self._seq_len.get(rid, 0) if rid is not None else 0
+        have = len(self._seq_pages.get(rid, [])) if rid is not None else 0
+        return self.pages_needed(used + n_tokens) - have
+
+    def has_room(self, rid: int | None, n_tokens: int) -> bool:
+        """Can ``n_tokens`` more rows be appended to ``rid`` (or a new seq)?"""
+        return self.pages_needed_for_append(rid, n_tokens) <= self.num_free_pages
+
+    def alloc(self, rid: int) -> None:
+        """Register an empty sequence (pages are grabbed lazily by append)."""
+        if rid in self._seq_pages:
+            raise KeyError(f"sequence {rid} already allocated")
+        self._seq_pages[rid] = []
+        self._seq_len[rid] = 0
+
+    def free(self, rid: int) -> None:
+        """Return all of ``rid``'s pages to the free list."""
+        for pid in self._seq_pages.pop(rid):
+            self._free.append(pid)
+        del self._seq_len[rid]
+
+    def seq_len(self, rid: int) -> int:
+        return self._seq_len[rid]
+
+    def seq_pages(self, rid: int) -> list[int]:
+        return list(self._seq_pages[rid])
+
+    def live_sequences(self) -> list[int]:
+        return list(self._seq_pages)
+
+    # ------------------------------------------------------------------ #
+    # data path
+    # ------------------------------------------------------------------ #
+    def append(self, rid: int, rows: jax.Array) -> None:
+        """Append ``rows (n, width)`` to sequence ``rid``, allocating pages.
+
+        Raises :class:`OutOfPagesError` (leaving the sequence unchanged) if
+        the pool cannot hold the new rows.
+        """
+        rows = jnp.asarray(rows, self.pages.dtype)
+        if rows.ndim != 2 or rows.shape[1] != self.width:
+            raise ValueError(f"rows must be (n, {self.width}); got {rows.shape}")
+        n = rows.shape[0]
+        if not self.has_room(rid, n):
+            raise OutOfPagesError(
+                f"append of {n} rows to seq {rid} needs more than the "
+                f"{self.num_free_pages} free pages"
+            )
+        used = self._seq_len[rid]
+        page_list = self._seq_pages[rid]
+        off = 0
+        while off < n:
+            pos = used + off
+            if pos // self.page_size == len(page_list):
+                page_list.append(self._free.popleft())
+            pid = page_list[pos // self.page_size]
+            in_page = pos % self.page_size
+            m = min(self.page_size - in_page, n - off)
+            # jit'd + donated: a 1-row decode append is an in-place slice
+            # write, not an O(pool) copy.  Indices are traced scalars, so
+            # only distinct chunk lengths ``m`` trigger a retrace (decode
+            # appends are always m == 1).
+            self.pages = _write_rows(
+                self.pages,
+                rows[off : off + m],
+                jnp.int32(pid),
+                jnp.int32(in_page),
+            )
+            off += m
+        self._seq_len[rid] = used + n
+
+    def block_table(
+        self, rids: list[int], width: int | None = None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched ``(block_tables (B, W) int32, kv_len (B,) int32)``.
+
+        ``W`` defaults to the max page count among ``rids`` (min 1); shorter
+        rows are padded with page id 0 — the kernel skips them via kv_len.
+        """
+        if width is None:
+            width = max([len(self._seq_pages[r]) for r in rids] + [1])
+        bt = np.zeros((len(rids), width), np.int32)
+        kv = np.zeros((len(rids),), np.int32)
+        for i, r in enumerate(rids):
+            pages = self._seq_pages[r]
+            if len(pages) > width:
+                raise ValueError(f"seq {r} has {len(pages)} pages > width {width}")
+            bt[i, : len(pages)] = pages
+            kv[i] = self._seq_len[r]
+        return bt, kv
+
+    def gather_contiguous(self, rid: int) -> jax.Array:
+        """Reassemble ``rid``'s rows as a contiguous (len, width) array.
+
+        Debug/test helper — the serving path never materialises this.
+        """
+        n = self._seq_len[rid]
+        if n == 0:
+            return jnp.zeros((0, self.width), self.pages.dtype)
+        parts = [self.pages[pid] for pid in self._seq_pages[rid]]
+        return jnp.concatenate(parts, axis=0)[:n]

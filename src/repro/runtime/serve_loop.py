@@ -137,6 +137,140 @@ class ServingSession:
         return self.outputs.pop(rid)
 
 
+class PagedDecodeSession:
+    """Continuous batching over a paged latent cache (the real thing).
+
+    Where :class:`ServingSession` reserves a contiguous ``max_len`` cache row
+    per slot, this session shares one page pool across every live request:
+    admission is by free-page count, eviction returns pages immediately, and
+    a request's context can grow until the *pool* (not its slot) is full.
+    Requests are admitted/evicted mid-stream; each ``step()`` batches all
+    live requests into one ``ops.mla_decode_paged`` call with ragged
+    per-request ``kv_len`` and block tables padded to the batch max.
+
+    The session operates at the attention level: callers bring absorbed
+    queries ``(G, d_k)`` and the new token's latent row per step (in a full
+    model server these come from the layer stack; examples/tests drive it
+    with synthetic latents).  ``attend()`` is the pure read path, ``step()``
+    = append-then-attend, which matches decode semantics (the new token
+    attends to itself).
+    """
+
+    def __init__(
+        self,
+        *,
+        num_pages: int,
+        page_size: int | None = None,
+        d_k: int = 576,
+        d_v: int = 512,
+        scale: float,
+        variant: str = "amla",
+        interpret: bool = False,
+        dtype=jnp.bfloat16,
+    ):
+        from repro.runtime.kv_cache import PagedKVCache
+        from repro.kernels.mla_decode_paged import DEFAULT_PAGE_SIZE
+
+        self.kv = PagedKVCache(
+            num_pages=num_pages,
+            page_size=page_size or DEFAULT_PAGE_SIZE,
+            width=d_k,
+            dtype=dtype,
+        )
+        self.d_k, self.d_v = d_k, d_v
+        self.scale, self.variant, self.interpret = scale, variant, interpret
+        # Fixed block-table width keeps the jit'd kernel's input shapes
+        # stable across admits/evicts and page-boundary growth (no retrace
+        # per step); sized for the worst case of one request owning the pool.
+        self.table_width = num_pages
+        self.active: list[int] = []
+        self._next_id = 0
+
+    def admit(self, latent_prompt) -> int | None:
+        """Admit a request whose prompt latents are ``(S, d_k)``.
+
+        Returns the request id, or None when the pool lacks pages (caller
+        queues and retries after an eviction — continuous batching).
+        """
+        latent_prompt = jnp.asarray(latent_prompt)
+        if not self.kv.has_room(None, latent_prompt.shape[0]):
+            return None
+        rid = self._next_id
+        self._next_id += 1
+        self.kv.alloc(rid)
+        self.kv.append(rid, latent_prompt)
+        self.active.append(rid)
+        return rid
+
+    def evict(self, rid: int) -> None:
+        """Finish/cancel ``rid``: its pages return to the pool immediately."""
+        if rid not in self.active:
+            raise KeyError(f"request {rid} is not live")
+        self.active.remove(rid)
+        self.kv.free(rid)
+
+    def attend(self, queries: dict[int, jax.Array]) -> dict[int, jax.Array]:
+        """Batched paged attention for ``{rid: (G, d_k)}`` absorbed queries.
+
+        Returns ``{rid: (G, d_v)}``.  All queried rids must be live (KeyError
+        otherwise — failing fast beats a silently missing output); lengths
+        may be ragged — shorter requests mask their block-table tail via
+        kv_len.
+        """
+        unknown = set(queries) - set(self.active)
+        if unknown:
+            raise KeyError(f"requests not live: {sorted(unknown)}")
+        rids = [r for r in self.active if r in queries]
+        if not rids:
+            return {}
+        bt, kv_len = self.kv.block_table(rids, width=self.table_width)
+        q = jnp.stack([jnp.asarray(queries[r]) for r in rids])[:, None]
+        from repro.kernels import ops
+
+        out = ops.mla_decode_paged(
+            q,
+            self.kv.pages,
+            jnp.asarray(bt),
+            jnp.asarray(kv_len),
+            d_v=self.d_v,
+            variant=self.variant,
+            scale=self.scale,
+            interpret=self.interpret,
+        )  # (B, 1, G, d_v)
+        return {r: out[i, 0] for i, r in enumerate(rids)}
+
+    def step(
+        self,
+        queries: dict[int, jax.Array],
+        new_latents: dict[int, jax.Array] | None = None,
+    ) -> dict[int, jax.Array]:
+        """One decode step: append each request's new latent row, then attend.
+
+        The appends are atomic: if the pool cannot hold *all* of this step's
+        new rows, OutOfPagesError is raised before any row lands, so the
+        caller can evict and retry the same step without double-appending.
+        """
+        if new_latents:
+            from repro.runtime.kv_cache import OutOfPagesError
+
+            rows = {
+                rid: (jnp.asarray(r)[None] if jnp.ndim(r) == 1 else jnp.asarray(r))
+                for rid, r in new_latents.items()
+            }
+            need = sum(
+                self.kv.pages_needed_for_append(rid, r.shape[0])
+                for rid, r in rows.items()
+            )
+            if need > self.kv.num_free_pages:
+                raise OutOfPagesError(
+                    f"step needs {need} new pages for {len(rows)} appends; "
+                    f"only {self.kv.num_free_pages} free — evict and retry"
+                )
+            for rid, r in rows.items():
+                self.kv.append(rid, r)
+        return self.attend(queries)
+
+
 def _write_slot(full, one, slot):
     """Write a batch-1 cache leaf into ``full`` at batch position ``slot``.
 

@@ -1,5 +1,6 @@
 """End-to-end tests of launch drivers and examples (CPU, smoke configs)."""
 
+import os
 import subprocess
 import sys
 
@@ -7,18 +8,21 @@ import pytest
 
 
 def run_script(args, timeout=560):
+    # Inherit the parent env (notably JAX_PLATFORMS: without it, jax probes
+    # for TPU hardware and stalls ~8 min per subprocess on TPU-less images).
     r = subprocess.run(
         [sys.executable] + args,
         capture_output=True,
         text=True,
         timeout=timeout,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        env={**os.environ, "PYTHONPATH": "src"},
         cwd=".",
     )
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
     return r.stdout
 
 
+@pytest.mark.slow
 def test_train_driver_smoke():
     out = run_script(
         [
@@ -29,6 +33,7 @@ def test_train_driver_smoke():
     assert "done: 12 steps" in out
 
 
+@pytest.mark.slow
 def test_train_driver_with_checkpointing(tmp_path):
     out = run_script(
         [
@@ -40,6 +45,7 @@ def test_train_driver_with_checkpointing(tmp_path):
     assert "finished at step" in out
 
 
+@pytest.mark.slow
 def test_serve_driver_smoke():
     out = run_script(
         [
@@ -51,6 +57,12 @@ def test_serve_driver_smoke():
     assert "served 3 requests" in out
 
 
+def test_example_serve_paged_decode():
+    out = run_script(["examples/serve_paged_decode.py"])
+    assert "paged vs contiguous" in out and "OK" in out
+
+
+@pytest.mark.slow
 def test_example_long_context_decode():
     out = run_script(["examples/long_context_decode.py"])
     assert "rel err" in out

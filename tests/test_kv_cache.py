@@ -1,0 +1,112 @@
+"""Unit tests for the paged latent-KV cache (runtime.kv_cache)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.kv_cache import OutOfPagesError, PagedKVCache
+
+
+def make_cache(num_pages=8, page_size=4, width=16):
+    return PagedKVCache(
+        num_pages=num_pages, page_size=page_size, width=width, dtype=jnp.float32
+    )
+
+
+def rows(n, width=16, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, width)).astype(np.float32)
+
+
+def test_alloc_append_roundtrip():
+    kv = make_cache()
+    kv.alloc(0)
+    data = rows(10, seed=1)
+    kv.append(0, data)
+    assert kv.seq_len(0) == 10
+    assert len(kv.seq_pages(0)) == 3  # ceil(10/4)
+    np.testing.assert_allclose(np.asarray(kv.gather_contiguous(0)), data)
+
+
+def test_incremental_append_crosses_pages():
+    kv = make_cache(page_size=4)
+    kv.alloc(7)
+    data = rows(11, seed=2)
+    for i in range(11):  # decode-style one-row appends
+        kv.append(7, data[i : i + 1])
+    np.testing.assert_allclose(np.asarray(kv.gather_contiguous(7)), data)
+    assert len(kv.seq_pages(7)) == 3
+
+
+def test_free_returns_pages_and_reuse_is_fragmented():
+    kv = make_cache(num_pages=6, page_size=4)
+    for rid, n in [(0, 8), (1, 8), (2, 8)]:
+        kv.alloc(rid)
+        kv.append(rid, rows(n, seed=rid))
+    assert kv.num_free_pages == 0
+    kv.free(1)  # free the *middle* request
+    assert kv.num_free_pages == 2
+    kv.alloc(3)
+    data = rows(8, seed=9)
+    kv.append(3, data)
+    # Reused pages are request 1's old (non-adjacent to request 3's logical
+    # order) pages — the block table is what makes this coherent.
+    assert sorted(kv.seq_pages(3)) == [2, 3]
+    np.testing.assert_allclose(np.asarray(kv.gather_contiguous(3)), data)
+    # Requests 0 and 2 are untouched by the reuse.
+    np.testing.assert_allclose(np.asarray(kv.gather_contiguous(0)), rows(8, seed=0))
+    np.testing.assert_allclose(np.asarray(kv.gather_contiguous(2)), rows(8, seed=2))
+
+
+def test_out_of_pages_raises_and_leaves_state_clean():
+    kv = make_cache(num_pages=2, page_size=4)
+    kv.alloc(0)
+    kv.append(0, rows(4))
+    with pytest.raises(OutOfPagesError):
+        kv.append(0, rows(8))
+    assert kv.seq_len(0) == 4  # unchanged
+    assert kv.num_free_pages == 1
+
+
+def test_has_room_accounts_for_partial_last_page():
+    kv = make_cache(num_pages=2, page_size=4)
+    kv.alloc(0)
+    kv.append(0, rows(3))
+    # 1 row of slack in page 0 + one free page = room for 5 more rows.
+    assert kv.has_room(0, 5)
+    assert not kv.has_room(0, 6)
+    assert kv.has_room(None, 4)
+    assert not kv.has_room(None, 5)
+
+
+def test_block_table_padding_and_ragged_lengths():
+    kv = make_cache(num_pages=8, page_size=4)
+    kv.alloc(0)
+    kv.append(0, rows(10))
+    kv.alloc(1)
+    kv.append(1, rows(2))
+    bt, kv_len = kv.block_table([0, 1])
+    assert bt.shape == (2, 3)  # padded to max page count
+    assert list(kv_len) == [10, 2]
+    assert list(bt[0]) == kv.seq_pages(0)
+    assert bt[1, 0] == kv.seq_pages(1)[0] and list(bt[1, 1:]) == [0, 0]
+
+
+def test_block_table_empty_sequence_has_width_one():
+    kv = make_cache()
+    kv.alloc(0)
+    bt, kv_len = kv.block_table([0])
+    assert bt.shape == (1, 1) and kv_len[0] == 0
+
+
+def test_double_alloc_rejected():
+    kv = make_cache()
+    kv.alloc(0)
+    with pytest.raises(KeyError):
+        kv.alloc(0)
+
+
+def test_bad_row_width_rejected():
+    kv = make_cache(width=16)
+    kv.alloc(0)
+    with pytest.raises(ValueError):
+        kv.append(0, rows(4, width=8))

@@ -1,5 +1,6 @@
 """Chunked-CE equivalence + an end-to-end dry-run cell via subprocess."""
 
+import os
 import subprocess
 import sys
 
@@ -65,7 +66,7 @@ def test_dryrun_cell_end_to_end():
             "--meshes", "single", "--out", "/tmp/dryrun_test",
         ],
         capture_output=True, text=True, timeout=560,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        env={**os.environ, "PYTHONPATH": "src"},
     )
     assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-800:]
     assert "[OK]" in r.stdout and "0 failed" in r.stdout

@@ -11,6 +11,14 @@ from repro.models.model_zoo import build_model
 
 ALL_ARCHS = ASSIGNED + BONUS
 
+# Tier 1 sweeps only the serving-critical archs (the paper's native MLA
+# geometry + the smallest dense model); the full zoo runs under --runslow.
+FAST_ARCHS = {"qwen1.5-0.5b", "deepseek-v2-mla"}
+ARCH_PARAMS = [
+    arch if arch in FAST_ARCHS else pytest.param(arch, marks=pytest.mark.slow)
+    for arch in ALL_ARCHS
+]
+
 
 def make_batch(cfg, rng, batch=2, seq=32):
     tokens = jax.random.randint(rng, (batch, seq), 0, cfg.vocab_size)
@@ -27,7 +35,7 @@ def make_batch(cfg, rng, batch=2, seq=32):
     return b
 
 
-@pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_forward_and_shapes(arch):
     cfg = get_config(arch, smoke=True)
     model = build_model(cfg)
@@ -43,7 +51,7 @@ def test_smoke_forward_and_shapes(arch):
         assert np.isfinite(np.asarray(logits, np.float32)).all()
 
 
-@pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_train_step(arch):
     cfg = get_config(arch, smoke=True)
     model = build_model(cfg)
@@ -67,7 +75,7 @@ def test_smoke_train_step(arch):
     assert gnorm >= 0.0
 
 
-@pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_decode_step(arch):
     cfg = get_config(arch, smoke=True)
     model = build_model(cfg)
@@ -99,7 +107,11 @@ def test_smoke_decode_step(arch):
         assert np.isfinite(np.asarray(logits, np.float32)).all(), (arch, i)
 
 
-@pytest.mark.parametrize("arch", ["gemma2-2b", "qwen2.5-3b", "mamba2-370m"])
+@pytest.mark.parametrize(
+    "arch",
+    [pytest.param(a, marks=pytest.mark.slow)
+     for a in ["gemma2-2b", "qwen2.5-3b", "mamba2-370m"]],
+)
 def test_decode_matches_full_forward(arch):
     """Incremental decode == full forward on the same token stream."""
     cfg = get_config(arch, smoke=True)

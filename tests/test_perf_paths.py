@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core import jax_compat
 from repro.core.distributed import gqa_split_kv_decode
 from repro.models.mla_layer import mla_apply, mla_init
 from repro.models.model_zoo import build_model
@@ -36,10 +37,7 @@ def test_gqa_split_kv_decode_matches_monolithic(kv_layout):
     """shard_map split-KV (cell-A fix) == plain attention, 1-device mesh."""
     from repro.core.attention import multi_head_attention
 
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    mesh = jax_compat.make_mesh((1, 1), ("data", "model"))
     b, sq, hq, hkv, dh, s = 2, 1, 8, 2, 32, 256
     rng = np.random.default_rng(0)
     q = jnp.asarray(rng.normal(size=(b, sq, hq, dh)), jnp.float32)
@@ -117,9 +115,7 @@ def test_seqkv_policy_in_mesh_ctx_single_device():
     params = model.init(jax.random.PRNGKey(0))
     b = 1
     tok = jax.random.randint(jax.random.PRNGKey(3), (b, 1), 0, cfg.vocab_size)
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    mesh = jax_compat.make_mesh((1, 1), ("data", "model"))
     c1 = model.init_cache(params, b, 16)
     l_plain, _ = model.decode_step(params, c1, tok, jnp.int32(4))
     c2 = model.init_cache(params, b, 16)

@@ -41,6 +41,7 @@ def to_jnp(batch):
 # ---------------------------------------------------------------------------
 # training
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 def test_train_loss_decreases():
     model, cfg = tiny_model()
     params, opt = make_state(model)
@@ -56,6 +57,7 @@ def test_train_loss_decreases():
     assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
 
 
+@pytest.mark.slow
 def test_grad_accum_matches_full_batch():
     model, cfg = tiny_model()
     params, opt = make_state(model)
@@ -79,6 +81,7 @@ def test_grad_accum_matches_full_batch():
     assert max(jax.tree.leaves(d)) < 5e-3
 
 
+@pytest.mark.slow
 def test_train_with_compression_and_remat():
     model, cfg = tiny_model()
     params, opt = make_state(model)
@@ -165,6 +168,7 @@ def test_serving_session_matches_batch_decode():
 # ---------------------------------------------------------------------------
 # fault tolerance
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 def test_supervisor_recovers_from_failures(tmp_path):
     model, cfg = tiny_model()
     params, opt = make_state(model)
@@ -197,6 +201,7 @@ def test_supervisor_recovers_from_failures(tmp_path):
     assert all(np.isfinite(float(m["loss"])) for _, m in history)
 
 
+@pytest.mark.slow
 def test_supervisor_resumes_from_checkpoint(tmp_path):
     model, cfg = tiny_model()
     params, opt = make_state(model)

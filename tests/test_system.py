@@ -6,6 +6,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint.checkpoint import CheckpointManager
 from repro.configs import get_config
@@ -16,6 +17,7 @@ from repro.runtime.serve_loop import ServingSession
 from repro.runtime.train_loop import TrainConfig, make_train_step
 
 
+@pytest.mark.slow
 def test_train_checkpoint_restore_serve_roundtrip(tmp_path):
     """The full lifecycle on the paper's native (MLA) architecture."""
     cfg = get_config("deepseek-v2-mla", smoke=True)
