@@ -1,18 +1,29 @@
-"""Paged vs contiguous MLA decode: latency + memory-efficiency comparison.
+"""Paged decode scheduling benchmark: work-queue vs padded grid, split-KV.
 
-    PYTHONPATH=src python -m benchmarks.paged_decode [--full]
+    PYTHONPATH=src python -m benchmarks.paged_decode [--smoke | --full]
 
-Two numbers matter for serving:
+Three numbers matter for serving, and each gets a scenario matrix
+(uniform / ragged / long-context straggler batches):
 
-* **step latency** — the paged kernel's block-table gather must not cost
-  wall-clock vs the contiguous kernel (on TPU the gather rides the grid
-  pipeline's prefetch; in interpret mode on CPU both paths pay the same
-  python-level tax, so treat CPU ratios as smoke only).
-* **pool efficiency** — contiguous slots reserve ``max_len`` rows per
-  request; pages waste at most ``page_size - 1`` rows per request.  The CSV
-  reports both so the ROADMAP's serving claims are backed by a number.
+* **work items** — the padded ``(B, W)`` grid pays one page-sized grid
+  step per logical table slot of the *longest* request; the flat work
+  queue (kernels/decode_schedule) pays one §4.2-block-sized step per KV
+  block that intersects ``kv_len``.  ``work_item_ratio`` compares grid
+  steps (hierarchical tiling + compaction together, the acceptance gate:
+  >= 1.5x on the ragged scenario); ``compaction_ratio`` is the
+  granularity-matched view (padded page slots vs live pages), isolating
+  pure schedule compaction from the bigger-step win.
+* **step latency / tokens/s** — measured per scheduler (on CPU interpret
+  both pay a python-level tax, treat as smoke; TPU via --full is the real
+  measurement).
+* **rescale-skip rate** — the fraction of §4.2-block AMLA updates whose
+  MUL-by-ADD increment is exactly zero (the paper's skipped [V2]); tracked
+  per scenario so scheduling changes can't silently regress the numerics
+  win.
 
-Output is CSV (``name,value,...``) like every other benchmarks/ section.
+``run()`` returns a JSON-able dict; ``benchmarks/run.py`` persists it as
+``BENCH_decode.json`` — the cross-PR perf trajectory.  Output here is CSV
+(``name,value,...``) like every other benchmarks/ section.
 """
 
 from __future__ import annotations
@@ -24,7 +35,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.amla import rescale_skip_rate
 from repro.kernels import ops
+from repro.kernels.decode_schedule import (
+    build_schedule,
+    padded_grid_items,
+    queue_grid_items,
+)
 from repro.runtime.kv_cache import PagedKVCache
 
 
@@ -41,17 +58,61 @@ def _time(fn, iters: int) -> float:
     return (time.perf_counter() - t0) / iters * 1e3
 
 
-def run(full: bool = False) -> None:
-    interpret = not _on_tpu()
-    if full:
-        b, hq, dk, dv, page, max_len = 8, 128, 576, 512, 128, 8192
-        iters = 20
-    else:  # interpret-friendly smoke geometry
-        b, hq, dk, dv, page, max_len = 2, 8, 576, 512, 128, 1024
-        iters = 2
+def _geometry(tier: str) -> dict:
+    """Scenario matrix per tier.  kv_lens are per-request context lengths;
+    the ragged tier-`full` scenario is the ISSUE-2 acceptance geometry
+    (B=8, kv_len in [256, 16384])."""
+    if tier == "full":  # serving scale (TPU)
+        g = dict(hq=128, dk=576, dv=512, page=128, block_k=512, iters=20)
+        rng = np.random.default_rng(7)
+        g["scenarios"] = {
+            "uniform": [8192] * 8,
+            "ragged": [int(x) for x in rng.integers(256, 16384, 8)],
+            "straggler": [1024] * 7 + [32768],
+        }
+    elif tier == "smoke":  # CI: interpret-mode, tiny shapes
+        g = dict(hq=4, dk=128, dv=128, page=32, block_k=128, iters=1)
+        g["scenarios"] = {
+            "uniform": [96, 96, 96],
+            "ragged": [16, 250, 60, 130],
+            "straggler": [20, 20, 20, 300],
+        }
+    else:  # default: interpret-friendly but paper-geometry rows
+        g = dict(hq=8, dk=576, dv=512, page=128, block_k=512, iters=2)
+        rng = np.random.default_rng(7)
+        g["scenarios"] = {
+            "uniform": [1024] * 4,
+            "ragged": [int(x) for x in rng.integers(128, 2048, 4)],
+            "straggler": [256] * 3 + [2048],
+        }
+    return g
 
+
+def _measure_rescale_skip(q_rows, c, kv_lens, scale, block_k) -> float:
+    """Mean per-request fraction of §4.2-block updates whose AMLA increment
+    is zero (running max stays inside one power-of-two bin)."""
+    rates = []
+    for r, l in enumerate(kv_lens):
+        nb = -(-int(l) // block_k)
+        if nb < 2:  # no transitions to measure
+            continue
+        qr = np.asarray(q_rows[r], np.float32)
+        cr = np.asarray(c[r, :l], np.float32)
+        m = np.full((qr.shape[0],), -1.0e5, np.float32)
+        trace = []
+        for i in range(nb):
+            s = (qr @ cr[i * block_k : min((i + 1) * block_k, l)].T) * scale
+            m = np.maximum(m, s.max(axis=-1))
+            trace.append(m.copy())
+        rates.append(float(rescale_skip_rate(jnp.asarray(np.stack(trace)))))
+    return float(np.mean(rates)) if rates else 1.0
+
+
+def _run_scenario(name, kv_lens, *, hq, dk, dv, page, block_k, iters,
+                  interpret, num_splits) -> dict:
+    b = len(kv_lens)
+    max_len = max(kv_lens)
     rng = np.random.default_rng(0)
-    kv_lens = [int(x) for x in rng.integers(max_len // 4, max_len, b)]
     scale = 1.0 / dk**0.5
     q = jnp.asarray(rng.normal(0, 0.3, (b, 1, hq, dk)), jnp.bfloat16)
     c = jnp.asarray(rng.normal(0, 0.3, (b, max_len, dk)), jnp.bfloat16)
@@ -67,38 +128,133 @@ def run(full: bool = False) -> None:
         kv.append(rid, c[rid, :l])
     bt, _ = kv.block_table(list(range(b)))
     bt = jnp.asarray(bt)
+    w = bt.shape[1]
+
+    schedule = build_schedule(kv_lens, block_k=block_k, num_splits=num_splits)
+    padded_work = padded_grid_items(kv_lens, w, page)
+    queue_work = queue_grid_items(schedule, kv_lens, page)
 
     def contiguous():
         return ops.mla_decode(
             q, c, d_v=dv, scale=scale, kv_len=kv_len, interpret=interpret
         )
 
-    def paged():
+    def padded():
         return ops.mla_decode_paged(
-            q, kv.pages, bt, kv_len, d_v=dv, scale=scale, interpret=interpret
+            q, kv.pages, bt, kv_len, d_v=dv, scale=scale,
+            interpret=interpret, scheduler="padded",
         )
 
-    max_abs = float(jnp.max(jnp.abs(paged() - contiguous())))
-    ms_contig = _time(contiguous, iters)
-    ms_paged = _time(paged, iters)
+    def queue():
+        return ops.mla_decode_paged(
+            q, kv.pages, bt, kv_len, d_v=dv, scale=scale,
+            interpret=interpret, scheduler="queue",
+            block_k=block_k, schedule=schedule,
+        )
+
+    max_abs_queue = float(jnp.max(jnp.abs(queue() - contiguous())))
+    max_abs_padded = float(jnp.max(jnp.abs(padded() - contiguous())))
+    ms_padded = _time(padded, iters)
+    ms_queue = _time(queue, iters)
+    skip = _measure_rescale_skip(
+        np.asarray(q[:, 0], np.float32), c, kv_lens, scale, block_k
+    )
 
     # memory: rows resident on device to serve this batch
-    contig_rows = b * max_len
     paged_rows = kv.num_pages * page
     used_rows = sum(kv_lens)
 
+    return {
+        "b": b,
+        "kv_lens": list(map(int, kv_lens)),
+        "table_width": int(w),
+        "ms_per_step_padded": ms_padded,
+        "ms_per_step_queue": ms_queue,
+        "tokens_per_s_padded": b / (ms_padded / 1e3),
+        "tokens_per_s_queue": b / (ms_queue / 1e3),
+        "rescale_skip_rate": skip,
+        "grid_steps_padded": padded_work["grid_steps"],
+        "grid_steps_queue": queue_work["grid_steps"],
+        "executed_items_queue": queue_work["executed_items"],
+        "page_dmas_padded": padded_work["page_dmas"],
+        "page_dmas_queue": queue_work["page_dmas"],
+        # grid-step ratio: fewer, bigger steps (§4.2 block granularity vs
+        # page granularity) *and* schedule compaction
+        "work_item_ratio": padded_work["grid_steps"]
+        / max(queue_work["grid_steps"], 1),
+        # granularity-matched: page slots walked by the padded grid vs live
+        # pages touched by the queue — pure compaction, no tiling credit
+        "compaction_ratio": padded_work["page_slots"]
+        / max(queue_work["live_pages"], 1),
+        "num_splits": num_splits,
+        "max_abs_diff_vs_contiguous_queue": max_abs_queue,
+        "max_abs_diff_vs_contiguous_padded": max_abs_padded,
+        "pool_util": used_rows / paged_rows,
+    }
+
+
+def run(full: bool = False, smoke: bool = False, num_splits: int = 2) -> dict:
+    interpret = not _on_tpu()
+    tier = "full" if full else ("smoke" if smoke else "default")
+    g = _geometry(tier)
     mode = "tpu" if not interpret else "cpu-interpret"
-    print(f"paged_decode,mode,{mode},b,{b},hq,{hq},page,{page}")
-    print(f"paged_decode,max_abs_diff,{max_abs:.3e}")
+
+    report = {
+        "bench": "paged_decode",
+        "mode": mode,
+        "tier": tier,
+        "hq": g["hq"],
+        "page_size": g["page"],
+        "block_k": g["block_k"],
+        "scenarios": {},
+    }
     print(
-        f"paged_decode,ms_contiguous,{ms_contig:.3f},ms_paged,{ms_paged:.3f},"
-        f"ratio,{ms_paged / ms_contig:.3f}"
+        f"paged_decode,mode,{mode},tier,{tier},hq,{g['hq']},"
+        f"page,{g['page']},block_k,{g['block_k']}"
     )
+    for name, kv_lens in g["scenarios"].items():
+        res = _run_scenario(
+            name,
+            kv_lens,
+            hq=g["hq"],
+            dk=g["dk"],
+            dv=g["dv"],
+            page=g["page"],
+            block_k=g["block_k"],
+            iters=g["iters"],
+            interpret=interpret,
+            num_splits=num_splits,
+        )
+        report["scenarios"][name] = res
+        print(
+            f"paged_decode,scenario,{name},b,{res['b']},"
+            f"ms_padded,{res['ms_per_step_padded']:.3f},"
+            f"ms_queue,{res['ms_per_step_queue']:.3f},"
+            f"tokens_per_s_queue,{res['tokens_per_s_queue']:.1f}"
+        )
+        print(
+            f"paged_decode,scenario,{name},"
+            f"grid_steps_padded,{res['grid_steps_padded']},"
+            f"grid_steps_queue,{res['grid_steps_queue']},"
+            f"work_item_ratio,{res['work_item_ratio']:.2f},"
+            f"compaction_ratio,{res['compaction_ratio']:.2f},"
+            f"page_dmas_padded,{res['page_dmas_padded']},"
+            f"page_dmas_queue,{res['page_dmas_queue']}"
+        )
+        print(
+            f"paged_decode,scenario,{name},"
+            f"rescale_skip_rate,{res['rescale_skip_rate']:.3f},"
+            f"max_abs_queue,{res['max_abs_diff_vs_contiguous_queue']:.3e},"
+            f"max_abs_padded,{res['max_abs_diff_vs_contiguous_padded']:.3e}"
+        )
+    ragged = report["scenarios"]["ragged"]
+    ok = ragged["work_item_ratio"] >= 1.5
     print(
-        f"paged_decode,rows_contiguous,{contig_rows},rows_paged,{paged_rows},"
-        f"rows_used,{used_rows},pool_util,{used_rows / paged_rows:.3f},"
-        f"contig_util,{used_rows / contig_rows:.3f}"
+        f"paged_decode,acceptance_ragged_work_ratio,"
+        f"{ragged['work_item_ratio']:.2f},"
+        f"compaction_ratio,{ragged['compaction_ratio']:.2f},pass,{int(ok)}"
     )
+    return report
 
 
 if __name__ == "__main__":
@@ -106,7 +262,13 @@ if __name__ == "__main__":
     ap.add_argument(
         "--full",
         action="store_true",
-        help="serving-scale geometry (TPU); default is an interpret-safe smoke",
+        help="serving-scale geometry (TPU); default is an interpret-safe tier",
     )
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny interpret-mode shapes for CI (keeps benchmark code green)",
+    )
+    ap.add_argument("--num-splits", type=int, default=2)
     args = ap.parse_args()
-    run(full=args.full)
+    run(full=args.full, smoke=args.smoke, num_splits=args.num_splits)

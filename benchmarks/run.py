@@ -6,15 +6,19 @@ Sections:
   [T2]  arithmetic intensity (paper Table 2 / Fig. 1)
   [T3/T4] accuracy vs golden (paper Tables 3-4) + compensation ablations
   [T5]  kernel FLOPS-utilisation model (paper Table 5 / Fig. 10)
-  [PAGED] paged vs contiguous decode latency + pool efficiency
+  [PAGED] decode scheduling: work-queue vs padded grid, split-KV
   [ROOFLINE] per-(arch x shape x mesh) dry-run roofline table (assignment)
 
 Each section prints CSV (``name,value,...``) so downstream tooling can diff.
+The [PAGED] section additionally persists its per-scenario report
+(tokens/s, ms/step, work items, rescale-skip rate) as ``BENCH_decode.json``
+— the machine-readable perf trajectory diffed across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
@@ -28,6 +32,16 @@ def main() -> None:
                     choices=["accuracy", "intensity", "kernel", "roofline",
                              "paged"])
     ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument(
+        "--decode-json",
+        default="BENCH_decode.json",
+        help="where the [PAGED] section writes its machine-readable report",
+    )
+    ap.add_argument(
+        "--full",
+        action="store_true",
+        help="serving-scale [PAGED] geometry (TPU)",
+    )
     args = ap.parse_args()
 
     t0 = time.time()
@@ -52,8 +66,12 @@ def main() -> None:
     if "paged" not in args.skip:
         from benchmarks import paged_decode
 
-        section("PAGED paged vs contiguous decode")
-        paged_decode.run()
+        section("PAGED decode scheduling (queue vs padded)")
+        report = paged_decode.run(full=args.full)
+        with open(args.decode_json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"paged_decode,json,{args.decode_json}")
 
     if "roofline" not in args.skip:
         from benchmarks import roofline_bench

@@ -66,6 +66,9 @@ def main() -> None:
     err = float(jnp.max(jnp.abs(out[r3] - want)))
     print(f"paged vs contiguous max|diff| on r{r3}: {err:.2e}")
     assert err <= 2e-3
+    stats = sess.scheduler_stats
+    print(f"work-queue scheduler: {stats['rebuilds']} rebuilds, "
+          f"{stats['hits']} reuse hits across steps")
     print("OK")
 
 

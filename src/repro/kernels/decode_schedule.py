@@ -1,0 +1,255 @@
+"""Flat work-queue scheduling for AMLA decode (paper §4.2 + flash-decoding).
+
+The padded ``(B, W)`` paged-decode grid pays one grid step (and one page DMA)
+per *logical table slot*, so a ragged serving batch burns steps on every
+short request's tail: a batch of 8 with one 16k-token straggler and seven 1k
+requests executes ``8 * 128`` page steps to do ``~70`` pages of real work.
+This module replaces that grid with a **compacted 1D work queue** built
+host-side from ``kv_len``:
+
+* one **work item** = one §4.2 KV block (``block_k`` rows = 4 pages of 128)
+  of one request — the granularity at which the kernel runs its preload
+  pipeline and a single AMLA MUL-by-ADD state update;
+* items exist only for blocks that intersect ``[0, kv_len)`` — no steps, no
+  DMAs for empty tail pages;
+* long requests are optionally **split flash-decoding style** across
+  ``num_splits`` destination slots (contiguous runs of blocks per slot), so
+  a single 32k straggler becomes ``num_splits`` shorter runs whose partial
+  ``(o, lse)`` states a small combine kernel merges
+  (:mod:`repro.kernels.mla_decode_combine`);
+* the queue is padded to a ``queue_bucket`` multiple with inert items
+  (``valid == 0``) so step-to-step queue growth retraces the jit'd kernel
+  only when it crosses a bucket boundary.
+
+Everything here is host-side numpy — scheduling is O(total blocks) per call
+and never enters a trace.  ``kv_len`` itself still reaches the kernel as
+dynamic data, so a schedule stays valid while every request's *block count*
+is unchanged; :class:`DecodeScheduler` exploits that to reuse one schedule
+across many serve-loop steps (a request only crosses a ``block_k`` boundary
+every ``block_k`` tokens).
+
+Destination-slot layout is static: request ``r`` split ``j`` accumulates
+into slot ``r * num_splits + j``, and one extra trailing slot is the dump
+for padding items, so partial-output shapes depend only on
+``(B, num_splits)`` — never on the raggedness of the batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+DEFAULT_QUEUE_BUCKET = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeSchedule:
+    """A compacted decode work queue (all arrays host-side numpy int32).
+
+    Queue arrays have length ``queue_len`` (``num_items`` real items followed
+    by ``valid == 0`` padding).  Items of one destination slot are contiguous
+    and in ascending block order — the kernel's scratch-carried softmax state
+    relies on that.
+    """
+
+    item_req: np.ndarray  # (N,) request index per item
+    item_block: np.ndarray  # (N,) kv-block index within the request
+    item_dest: np.ndarray  # (N,) destination partial-state slot
+    item_first: np.ndarray  # (N,) 1 on a dest's first item (state init)
+    item_last: np.ndarray  # (N,) 1 on a dest's last item (finalize+write)
+    item_valid: np.ndarray  # (N,) 0 for queue padding (inert)
+    dest_table: np.ndarray  # (B, num_splits) dest slot per request/split
+    n_splits: np.ndarray  # (B,) live splits per request (0 if kv_len == 0)
+    block_k: int  # rows per work item (§4.2: 512)
+    num_splits: int  # max splits per request (static)
+    num_items: int  # real items (excludes padding)
+    num_requests: int
+
+    @property
+    def queue_len(self) -> int:
+        return int(self.item_req.shape[0])
+
+    @property
+    def num_dest_slots(self) -> int:
+        """Partial-output rows: B * num_splits real + 1 padding dump."""
+        return self.num_requests * self.num_splits + 1
+
+    def prefetch_arrays(self) -> tuple[np.ndarray, ...]:
+        """The six queue arrays in the kernel's scalar-prefetch order."""
+        return (
+            self.item_req,
+            self.item_block,
+            self.item_dest,
+            self.item_first,
+            self.item_last,
+            self.item_valid,
+        )
+
+
+def _block_signature(kv_lens: np.ndarray, block_k: int) -> tuple:
+    """Per-request block counts — the only thing a schedule depends on."""
+    return tuple(-(-int(l) // block_k) for l in kv_lens)
+
+
+def build_schedule(
+    kv_lens,
+    *,
+    block_k: int = 512,
+    num_splits: int = 1,
+    queue_bucket: int = DEFAULT_QUEUE_BUCKET,
+) -> DecodeSchedule:
+    """Compact ``(request, kv_block)`` work items from per-request lengths.
+
+    Splitting policy: a request with ``nb`` blocks is divided into
+    ``min(num_splits, nb)`` contiguous chunks of near-equal size (first
+    chunks one block longer when ``nb % splits != 0``).  ``num_splits == 1``
+    degenerates to one run per request — no combine needed beyond the
+    identity.
+    """
+    if block_k < 1:
+        raise ValueError("block_k must be >= 1")
+    if num_splits < 1:
+        raise ValueError("num_splits must be >= 1")
+    kv_lens = np.asarray(kv_lens, np.int64).reshape(-1)
+    b = int(kv_lens.shape[0])
+
+    req, blk, dst, fst, lst = [], [], [], [], []
+    dest_table = np.zeros((b, num_splits), np.int32)
+    n_splits = np.zeros((b,), np.int32)
+    for r in range(b):
+        nb = -(-int(kv_lens[r]) // block_k)
+        k = min(num_splits, nb)
+        n_splits[r] = k
+        # Padding dest entries repeat the request's own last live slot so the
+        # combine kernel's gated-off block fetches stay on warm data.
+        dest_table[r, :] = r * num_splits + max(k - 1, 0)
+        base, rem = divmod(nb, max(k, 1))
+        next_block = 0
+        for j in range(k):
+            dest = r * num_splits + j
+            dest_table[r, j] = dest
+            chunk = base + (1 if j < rem else 0)
+            for t in range(chunk):
+                req.append(r)
+                blk.append(next_block + t)
+                dst.append(dest)
+                fst.append(1 if t == 0 else 0)
+                lst.append(1 if t == chunk - 1 else 0)
+            next_block += chunk
+
+    num_items = len(req)
+    pad_to = max(queue_bucket, 1)
+    n = max(-(-num_items // pad_to) * pad_to, pad_to)
+    dump = b * num_splits  # trailing dest slot, never combined
+    pad = n - num_items
+    arr = lambda xs, fill: np.asarray(xs + [fill] * pad, np.int32)
+    return DecodeSchedule(
+        item_req=arr(req, 0),
+        item_block=arr(blk, 0),
+        item_dest=arr(dst, dump),
+        item_first=arr(fst, 1),
+        item_last=arr(lst, 0),
+        item_valid=np.asarray([1] * num_items + [0] * pad, np.int32),
+        dest_table=dest_table,
+        n_splits=n_splits,
+        block_k=block_k,
+        num_splits=num_splits,
+        num_items=num_items,
+        num_requests=b,
+    )
+
+
+class DecodeScheduler:
+    """Memoizing schedule factory for a serve loop.
+
+    A decode step advances every active request by one token, but a
+    request's *block count* changes only every ``block_k`` tokens — so the
+    same :class:`DecodeSchedule` (and therefore the same traced kernel
+    shapes) serves ``~block_k`` consecutive steps.  ``schedule()`` rebuilds
+    only when the block signature of the batch changes and counts hits for
+    the benchmarks.
+    """
+
+    def __init__(
+        self,
+        *,
+        block_k: int = 512,
+        num_splits: int = 1,
+        queue_bucket: int = DEFAULT_QUEUE_BUCKET,
+    ):
+        self.block_k = block_k
+        self.num_splits = num_splits
+        self.queue_bucket = queue_bucket
+        self._key: tuple | None = None
+        self._cached: DecodeSchedule | None = None
+        self.hits = 0
+        self.rebuilds = 0
+
+    def schedule(self, kv_lens) -> DecodeSchedule:
+        kv_lens = np.asarray(kv_lens).reshape(-1)
+        key = (kv_lens.shape[0], _block_signature(kv_lens, self.block_k))
+        if key == self._key and self._cached is not None:
+            self.hits += 1
+            return self._cached
+        self.rebuilds += 1
+        self._cached = build_schedule(
+            kv_lens,
+            block_k=self.block_k,
+            num_splits=self.num_splits,
+            queue_bucket=self.queue_bucket,
+        )
+        self._key = key
+        return self._cached
+
+
+# --------------------------------------------------------------------------- #
+# work accounting (benchmarks + acceptance criteria)
+# --------------------------------------------------------------------------- #
+
+
+def padded_grid_items(kv_lens, table_width: int, page_size: int) -> dict:
+    """Work executed by the padded ``(B, W)`` grid on this batch.
+
+    Every request walks all ``W`` table slots — a grid step per slot whether
+    or not it holds live tokens.  DMA accounting credits the grid pipeline's
+    revisited-block elision: tail slots all resolve to the request's last
+    valid page (``clamp_tail_pages``), so after the first tail step the
+    input block index repeats and the re-fetch is skipped — a request pays
+    its live pages plus at most one extra tail fetch.
+
+    ``page_slots`` (= grid steps) is the granularity-matched compaction
+    baseline: the number of page-sized work slots the padded schedule walks,
+    against the queue's ``live_pages``.
+    """
+    kv_lens = np.asarray(kv_lens, np.int64).reshape(-1)
+    b = int(kv_lens.shape[0])
+    pages = [-(-int(l) // page_size) for l in kv_lens]
+    live_pages = int(sum(pages))
+    page_dmas = int(sum(p + (1 if p < table_width else 0) for p in pages))
+    return {
+        "grid_steps": b * table_width,
+        "page_slots": b * table_width,
+        "page_dmas": page_dmas,
+        "live_pages": live_pages,
+    }
+
+
+def queue_grid_items(schedule: DecodeSchedule, kv_lens, page_size: int) -> dict:
+    """Work executed by the flat queue on this batch.
+
+    Queue grid steps are §4.2-block-sized (``block_k`` rows each, incl.
+    inert bucket padding), so compare them with padded grid steps only as
+    *step counts*; the granularity-matched comparison is ``page_slots``
+    (padded) vs ``live_pages`` / ``page_dmas`` here.  Page DMAs are issued
+    only for pages that intersect ``kv_len`` — dead tail sub-tiles are
+    zero-filled in VMEM instead.
+    """
+    kv_lens = np.asarray(kv_lens, np.int64).reshape(-1)
+    live_pages = int(sum(-(-int(l) // page_size) for l in kv_lens))
+    return {
+        "grid_steps": schedule.queue_len,
+        "executed_items": schedule.num_items,
+        "page_dmas": live_pages,
+        "live_pages": live_pages,
+    }

@@ -14,9 +14,22 @@ which (a) is an integer VPU op instead of transcendental+multiply and (b) is
 *skipped entirely* when the increment is zero — the common case, since the
 running max rarely crosses a power-of-two boundary.
 
-Tiling rationale (paper §4.2 adapted to v5e):  VMEM working set per program =
-Q (G*576*2B = 144 KB at G=128) + c-block (512*576*2B = 576 KB, double-
-buffered by the grid pipeline) + acc (G*512*4B = 256 KB) << 16 MB VMEM.
+Preload pipeline (paper §4.2, hierarchical tiling):  each grid step covers
+one 512-row KV block, fetched from HBM as four 128-row **sub-tiles** with
+explicit ``pltpu.make_async_copy`` DMAs started one sub-tile ahead: while
+sub-tile ``j``'s score matmul runs on the MXU, sub-tile ``j+1``'s copy is in
+flight.  All four sub-tile score strips then fold into a *single* AMLA
+MUL-by-ADD state update and one (G x 512) x (512 x D_v) PV matmul — 4x fewer
+rescale checks and power-of-two crossings than per-page updates, full-block
+MXU occupancy.  The staging buffer is double-buffered across grid steps: at
+the end of each block the kernel starts the *next* block's first sub-tile
+copy into the other buffer (cross-step lookahead), so consecutive blocks
+never stall on a cold first copy.  Sub-tiles past ``kv_len`` are zero-filled
+in VMEM instead of DMA'd — a ragged tail costs vector stores, not HBM
+bandwidth.
+
+VMEM working set per program = Q (G*576*2B = 144 KB at G=128) + KV-block
+scratch (512*576*2B = 576 KB) + acc (G*512*4B = 256 KB) << 16 MB VMEM.
 Matmul dims (G=128, 512, 576=512+64) are MXU-aligned multiples of 128 except
 the 64-wide rope tail, which Mosaic pads by half a lane-tile.
 """
@@ -35,6 +48,10 @@ from repro.kernels.compat import CompilerParams
 from repro.core import numerics
 
 DEFAULT_BLOCK_K = 512
+# Preload-pipeline granularity: one sub-tile = one DMA = one score matmul.
+# 128 keeps the (G x 128 x 576) strip MXU-aligned and equals the paged
+# kernel's page size, so both kernels share the same pipeline shape.
+SUB_K = 128
 
 
 def decode_state_scratch(g: int, d_v: int) -> list:
@@ -67,6 +84,90 @@ def init_decode_state(acc_ref, m_ref, l_ref, n_ref, gamma_ref, s16_ref):
     n_ref[...] = n0
     gamma_ref[...] = jnp.ones_like(gamma_ref)
     s16_ref[...] = numerics.bf16_round(inv_r0)
+
+
+def preload_block_scores(
+    q_ref, kv_view, *, n_sub, sub_k, src, live, sem, first_prefetched
+):
+    """§4.2 preload pipeline over one KV block, shared by both decode kernels.
+
+    ``kv_view`` is this block's (n_sub*sub_k, Dk) VMEM staging buffer (one
+    slot of the double-buffered scratch); ``src(j)`` returns the HBM source
+    ref slice for sub-tile ``j`` (a contiguous cache slice or a block-table
+    page — only called under a taken ``live(j)`` branch, so gated scalar
+    reads inside it stay in-bounds); ``live(j)`` is the traced predicate
+    that sub-tile ``j`` intersects ``kv_len``; ``first_prefetched`` is the
+    traced predicate that the *previous* grid step already started sub-tile
+    0's copy into this buffer (cross-step lookahead — see
+    :func:`prefetch_next_first_subtile`).
+
+    Copies run one sub-tile ahead of the score matmul; dead tail sub-tiles
+    are zero-filled in VMEM instead of DMA'd.  Returns the concatenated
+    (G, n_sub*sub_k) FP32 score strip.
+    """
+
+    def dma(j):
+        return pltpu.make_async_copy(
+            src(j),
+            kv_view.at[pl.ds(j * sub_k, sub_k), :],
+            sem.at[j],
+        )
+
+    def issue(j):
+        cond = live(j)
+        if j == 0:
+            cond = cond & jnp.logical_not(first_prefetched)
+
+        @pl.when(cond)
+        def _start():
+            dma(j).start()
+
+        # Tail sub-tiles past kv_len cost vector stores, never DMAs.
+        @pl.when(jnp.logical_not(live(j)))
+        def _zero():
+            kv_view[pl.ds(j * sub_k, sub_k), :] = jnp.zeros(
+                (sub_k, kv_view.shape[1]), kv_view.dtype
+            )
+
+    def wait(j):
+        @pl.when(live(j))
+        def _wait():
+            dma(j).wait()
+
+    issue(0)
+    parts = []
+    for j in range(n_sub):
+        if j + 1 < n_sub:
+            issue(j + 1)
+        wait(j)
+        s_j = jax.lax.dot_general(
+            q_ref[...],
+            kv_view[pl.ds(j * sub_k, sub_k), :],
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        parts.append(s_j)
+    return jnp.concatenate(parts, axis=1) if n_sub > 1 else parts[0]
+
+
+def prefetch_next_first_subtile(src0, kv_view_next, sem, *, sub_k, cond):
+    """Cross-grid-step lookahead: start the *next* block's sub-tile-0 copy.
+
+    Called at the end of a block's compute so the copy overlaps the state
+    update and the next step's own pipeline warm-up — the step never stalls
+    on its first sub-tile the way a cold start would.  ``cond`` must be
+    computable identically at this step and the next (both read the same
+    scalar-prefetched arrays), so starts and waits pair up exactly; the
+    destination is the *other* slot of the double-buffered scratch.
+    """
+
+    @pl.when(cond)
+    def _start():
+        pltpu.make_async_copy(
+            src0(),
+            kv_view_next.at[pl.ds(0, sub_k), :],
+            sem.at[0],
+        ).start()
 
 
 def decode_block_update(
@@ -142,7 +243,7 @@ def _mla_decode_kernel(
     q_pos_ref,  # (B, G) int32 absolute positions per query row
     # inputs
     q_ref,  # (G, Dk) bf16
-    c_ref,  # (Bk, Dk) bf16   (latent KV block; V = first d_v columns)
+    c_hbm,  # (B, S_pad, Dk) bf16 latent cache, resident in HBM (ANY)
     # outputs
     o_ref,  # (G, Dv)
     # scratch
@@ -152,11 +253,14 @@ def _mla_decode_kernel(
     n_ref,  # (G, 1) i32      } amla only (allocated regardless; cheap)
     gamma_ref,  # (G, 1) f32  }
     s16_ref,  # (G, 1) f32    }
+    kv_blk_ref,  # (2, block_k, Dk) double-buffered VMEM staging
+    sem,  # DMA semaphores, one per sub-tile
     *,
     scale: float,
     d_v: int,
     variant: str,
     block_k: int,
+    sub_k: int,
     softcap: float | None,
 ):
     b = pl.program_id(0)
@@ -168,16 +272,41 @@ def _mla_decode_kernel(
 
     k_len = kv_len_ref[b]
     start = i * block_k
+    n_sub = block_k // sub_k
+    # Block i stages into buffer i % 2; the end-of-block lookahead targets
+    # the other buffer.  Because live blocks of a request are a prefix of
+    # its grid steps, "i > 0" is exactly "the previous step was live and
+    # prefetched this block's sub-tile 0" (its condition below was this
+    # block's liveness), and i == 0 (a new request row) restarts the parity
+    # cleanly with a one-off warm-up.
+    cur = jax.lax.rem(i, 2)
 
     @pl.when(start < k_len)
     def _compute():
-        # [C1] (MXU): S = Q c^T over the full 576-wide latent+rope key.
-        c_blk = c_ref[...]
-        s = jax.lax.dot_general(
-            q_ref[...],
-            c_blk,
-            (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32,
+        kv_view = kv_blk_ref.at[cur]
+
+        def live(j):
+            return start + j * sub_k < k_len
+
+        def src(j):
+            return c_hbm.at[b, pl.ds(start + j * sub_k, sub_k), :]
+
+        s = preload_block_scores(
+            q_ref, kv_view, n_sub=n_sub, sub_k=sub_k,
+            src=src, live=live, sem=sem, first_prefetched=i > 0,
+        )
+        # Cross-step lookahead: start the next block's first sub-tile now so
+        # its copy overlaps this block's state update.  No next-block check
+        # against the grid bound is needed: start + block_k < k_len already
+        # implies another block of this request exists (the cache is padded
+        # to a block multiple), and a false condition at the row's last live
+        # block also stops the chain before the next request row.
+        prefetch_next_first_subtile(
+            lambda: c_hbm.at[b, pl.ds(start + block_k, sub_k), :],
+            kv_blk_ref.at[1 - cur],
+            sem,
+            sub_k=sub_k,
+            cond=start + block_k < k_len,
         )
         s = s * jnp.float32(scale)
         if softcap is not None:
@@ -190,7 +319,7 @@ def _mla_decode_kernel(
         s = jnp.where(mask, s, -jnp.inf)
 
         decode_block_update(
-            s, c_blk,
+            s, kv_view[...],
             acc_ref, m_ref, l_ref, n_ref, gamma_ref, s16_ref,
             d_v=d_v, variant=variant, mm_dtype=q_ref.dtype,
         )
@@ -227,7 +356,12 @@ def mla_decode_rows(
     """Row-level entry point; see ops.mla_decode for the (B,Sq,H,D) API."""
     b, g, d_k = q.shape
     s = c_kv.shape[1]
-    block_k = min(block_k, max(s, 128))
+    # Clamp to the cache length, staying a multiple of the sub-tile size so
+    # the preload pipeline divides the block evenly.
+    sub_k = min(SUB_K, max(block_k, 1))
+    block_k = min(block_k, -(-max(s, 1) // sub_k) * sub_k)
+    if block_k % sub_k:
+        raise ValueError(f"block_k={block_k} must be a multiple of {sub_k}")
     pad = (-s) % block_k
     if pad:
         c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
@@ -238,10 +372,18 @@ def mla_decode_rows(
         grid=(b, n_blocks),
         in_specs=[
             pl.BlockSpec((None, g, d_k), lambda bb, ii, *_: (bb, 0, 0)),
-            pl.BlockSpec((None, block_k, d_k), lambda bb, ii, *_: (bb, ii, 0)),
+            # The latent cache stays in HBM; the kernel's preload pipeline
+            # stages sub-tiles into VMEM scratch with explicit DMAs.
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
         ],
         out_specs=pl.BlockSpec((None, g, d_v), lambda bb, ii, *_: (bb, 0, 0)),
-        scratch_shapes=decode_state_scratch(g, d_v),
+        scratch_shapes=decode_state_scratch(g, d_v)
+        + [
+            # Double-buffered so the cross-step lookahead can stage the next
+            # block's first sub-tile while this block is still being read.
+            pltpu.VMEM((2, block_k, d_k), c_kv.dtype),
+            pltpu.SemaphoreType.DMA((block_k // sub_k,)),
+        ],
     )
     kernel = functools.partial(
         _mla_decode_kernel,
@@ -249,6 +391,7 @@ def mla_decode_rows(
         d_v=d_v,
         variant=variant,
         block_k=block_k,
+        sub_k=sub_k,
         softcap=softcap,
     )
     return pl.pallas_call(

@@ -1,28 +1,40 @@
-"""Pallas TPU kernel: paged MLA decode — AMLA over a block-table KV cache.
+"""Pallas TPU kernels: paged MLA decode — AMLA over a block-table KV cache.
 
 Serving-side twin of :mod:`repro.kernels.mla_decode`.  Instead of one
 contiguous ``(B, S, 576)`` latent cache, the latents live in a shared pool of
 fixed-size pages ``(num_pages, page_size, 576)`` and each request owns an
 ordered list of physical page ids (its *block table*, see
-``runtime/kv_cache.PagedKVCache``).  The kernel walks each request's logical
-pages on the sequential grid dimension and resolves logical → physical via a
-scalar-prefetched block table: the page id feeds the input ``index_map``, so
-Mosaic's grid pipeline DMAs the right physical page into VMEM one step ahead,
-exactly like the contiguous kernel's next-block prefetch — gather costs
-nothing extra on the data path.
+``runtime/kv_cache.PagedKVCache``).  Two kernels share the AMLA MUL-by-ADD
+state machine (init / update / finalize from ``mla_decode``):
 
-The per-block online-softmax state machine (init / update / finalize,
-including the AMLA MUL-by-ADD rescale via ``numerics.pow2_int_increment`` /
-``apply_int_increment`` and its skip-when-zero fast path) is shared verbatim
-with the contiguous kernel through the helpers in ``mla_decode``.
+**Work-queue kernel** (:func:`mla_decode_paged_queue_rows`, the serving
+default) — the §4.2 hierarchical-tiling + flat-scheduling path.  A host-side
+scheduler (:mod:`repro.kernels.decode_schedule`) compacts ``(request,
+kv_block)`` work items from ``kv_len`` into a 1D queue: one grid step per
+**512-row KV block** (4 pages), zero steps for empty tail pages, long
+requests optionally split flash-decoding style across destination slots
+whose partial ``(o, lse)`` states a combine kernel merges
+(:mod:`repro.kernels.mla_decode_combine`).  Within an item the kernel runs
+the paper's preload pipeline: the 4 pages are gathered from HBM into a
+VMEM block with explicit ``make_async_copy`` DMAs started one page ahead of
+the per-page score matmul, and all four score strips fold into a *single*
+AMLA state update.  Pages past ``kv_len`` are zero-filled in VMEM — a ragged
+tail costs vector stores, not HBM bandwidth.
+
+**Padded-grid kernel** (:func:`mla_decode_paged_rows`, kept as the simple
+baseline and work-accounting reference) — ``grid = (B, W)`` walks every
+request over the *longest* block table, one page per step, resolved
+logical → physical by a scalar-prefetched table feeding the input
+``index_map``.  Steps past a request's length skip their FLOPs but still
+DMA a page; those tail fetches are clamped to the request's *own last valid
+page* (not physical page 0) so short requests in a ragged batch re-touch a
+warm page instead of hammering one shared pool page.
 
 Page size default is 128: pages are lane-tile aligned (bf16 second-minor
-tiling is 16, f32 is 8) and 4 pages make up the paper's §4.2 KV block of 512,
-so the AMLA rescale-skip statistics are at least as good as the contiguous
-kernel's (more, smaller blocks ⇒ the running max crosses a power-of-two
-boundary in a *smaller* fraction of updates).  Smaller pages cut allocation
-slack for ragged serving batches at the cost of more grid steps; 128 is the
-floor where the (G×128×576) score matmul still fills the MXU.
+tiling is 16, f32 is 8) and 4 pages make up the paper's §4.2 KV block of
+512.  The queue kernel's one-update-per-512-rows folding keeps the AMLA
+rescale-skip statistics at the paper's block granularity while the DMA
+granularity stays one page.
 """
 
 from __future__ import annotations
@@ -40,6 +52,37 @@ from repro.core import numerics
 from repro.kernels import mla_decode as _mla
 
 DEFAULT_PAGE_SIZE = 128
+
+
+def clamp_tail_pages(
+    block_tables: jax.Array,  # (B, W) int32
+    kv_len: jax.Array,  # (B,) int32
+    page_size: int,
+    num_pages: int,
+) -> jax.Array:
+    """Point tail block-table entries at the request's own last valid page.
+
+    Entries past ``ceil(kv_len / page_size)`` are padding: the padded-grid
+    kernel still DMAs them (the gather rides the grid pipeline and cannot be
+    skipped), and the queue kernel may prefetch them at a block's ragged
+    edge.  Directing them to the request's last live page keeps those fetches
+    on data that is already warm per-request instead of serialising every
+    short request in the batch onto physical page 0 — a shared-pool hotspot.
+    Requests with ``kv_len == 0`` fall back to their (clamped) first entry.
+    """
+    bt = block_tables.astype(jnp.int32)
+    w = bt.shape[1]
+    pages_used = -((-kv_len.astype(jnp.int32)) // page_size)  # ceil
+    last_idx = jnp.clip(pages_used - 1, 0, w - 1)
+    last_page = jnp.take_along_axis(bt, last_idx[:, None], axis=1)  # (B, 1)
+    col = jax.lax.broadcasted_iota(jnp.int32, bt.shape, 1)
+    bt = jnp.where(col < pages_used[:, None], bt, last_page)
+    return jnp.clip(bt, 0, num_pages - 1)
+
+
+# --------------------------------------------------------------------------- #
+# padded (B, W) grid kernel — baseline
+# --------------------------------------------------------------------------- #
 
 
 def _mla_decode_paged_kernel(
@@ -77,7 +120,8 @@ def _mla_decode_paged_kernel(
     start = i * page_size
 
     # Pages past the request's length are skipped entirely (their DMA still
-    # lands — index_map points it at page 0 — but no FLOPs are spent).
+    # lands — clamped to the request's own last valid page — but no FLOPs
+    # are spent).
     @pl.when(start < k_len)
     def _compute():
         c_blk = page_ref[...]
@@ -131,21 +175,23 @@ def mla_decode_paged_rows(
     softcap: float | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Row-level paged decode; see ops.mla_decode_paged for the (B,Sq,H,D) API.
+    """Row-level paged decode over the padded ``(B, W)`` grid.
 
     ``W = block_tables.shape[1]`` logical pages are walked per request;
     requests shorter than ``W * page_size`` mask the tail via ``kv_len``
     (entries past a request's last page may be arbitrary in-range ids —
-    they are clamped here and their compute is skipped).  A request with
-    ``kv_len == 0`` (inactive serving slot) yields exact zeros.
+    they are redirected to the request's own last valid page here and their
+    compute is skipped).  A request with ``kv_len == 0`` (inactive serving
+    slot) yields exact zeros.  The serving path normally goes through the
+    work-queue kernel instead (see ``ops.mla_decode_paged``).
     """
     b, g, d_k = q.shape
     num_pages, page_size, _ = kv_pages.shape
     w = block_tables.shape[1]
     if w < 1:
         raise ValueError("block_tables must have at least one page column")
-    # Keep every gathered id in-range so skipped steps DMA a real page.
-    block_tables = jnp.clip(block_tables.astype(jnp.int32), 0, num_pages - 1)
+    kv_len = kv_len.astype(jnp.int32)
+    block_tables = clamp_tail_pages(block_tables, kv_len, page_size, num_pages)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
@@ -181,9 +227,241 @@ def mla_decode_paged_rows(
         ),
         interpret=interpret,
     )(
-        kv_len.astype(jnp.int32),
+        kv_len,
         q_pos.astype(jnp.int32),
         block_tables,
+        q,
+        kv_pages,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# flat work-queue kernel — hierarchical tiling + preload pipeline
+# --------------------------------------------------------------------------- #
+
+
+def _mla_decode_queue_kernel(
+    # scalar prefetch
+    kv_len_ref,  # (B,) int32
+    q_pos_ref,  # (B, G) int32
+    bt_ref,  # (B, W) int32 logical page -> physical page id
+    ireq_ref,  # (N,) int32 request index per work item
+    iblk_ref,  # (N,) int32 kv-block index within the request
+    idst_ref,  # (N,) int32 destination partial-state slot  (used by index_maps)
+    ifst_ref,  # (N,) int32 1 on a dest's first item
+    ilst_ref,  # (N,) int32 1 on a dest's last item
+    ivld_ref,  # (N,) int32 0 for queue padding
+    # inputs
+    q_ref,  # (G, Dk) bf16 (block selected by item_req)
+    pages_hbm,  # (P, page_size, Dk) page pool, resident in HBM (ANY)
+    # outputs (blocks selected by item_dest)
+    o_ref,  # (G, Dv) f32 normalized partial output of this dest slot
+    lse_ref,  # (G, 1) f32 log-sum-exp of this dest slot
+    # scratch
+    acc_ref,
+    m_ref,
+    l_ref,
+    n_ref,
+    gamma_ref,
+    s16_ref,
+    kv_blk_ref,  # (2, block_k, Dk) double-buffered VMEM staging
+    sem,  # DMA semaphores, one per page of the block
+    *,
+    scale: float,
+    d_v: int,
+    variant: str,
+    page_size: int,
+    block_k: int,
+    softcap: float | None,
+):
+    t = pl.program_id(0)
+    req = ireq_ref[t]
+    blk = iblk_ref[t]
+    first = ifst_ref[t]
+    last = ilst_ref[t]
+    valid = ivld_ref[t]
+
+    # A dest slot's items are contiguous in the queue, so its online-softmax
+    # state lives in scratch across grid steps: init on the first item,
+    # finalize+write on the last.  Padding items re-init harmlessly.
+    @pl.when(first == 1)
+    def _init():
+        _mla.init_decode_state(acc_ref, m_ref, l_ref, n_ref, gamma_ref, s16_ref)
+
+    k_len = kv_len_ref[req]
+    start = blk * block_k
+    n_sub = block_k // page_size
+    first_page = blk * n_sub
+    # Item t stages into buffer t % 2; the end-of-item lookahead targets the
+    # other buffer.  Valid items are a contiguous queue prefix, so "t > 0"
+    # is exactly "the previous step prefetched this item's first page" (its
+    # condition below was this item's validity), and a valid item's first
+    # page always intersects kv_len by construction.
+    t_next = jnp.minimum(t + 1, pl.num_programs(0) - 1)
+    cur = jax.lax.rem(t, 2)
+
+    @pl.when(valid == 1)
+    def _compute():
+        kv_view = kv_blk_ref.at[cur]
+
+        def live(j):
+            return start + j * page_size < k_len
+
+        def src(j):
+            # live(j) bounds first_page + j inside this request's table
+            # row, so the gather never reads a padding entry.
+            return pages_hbm.at[bt_ref[req, first_page + j]]
+
+        s = _mla.preload_block_scores(
+            q_ref, kv_view, n_sub=n_sub, sub_k=page_size,
+            src=src, live=live, sem=sem, first_prefetched=t > 0,
+        )
+        # Cross-step lookahead: start the next work item's first-page gather
+        # now so its copy overlaps this item's state update.
+        _mla.prefetch_next_first_subtile(
+            lambda: pages_hbm.at[
+                bt_ref[ireq_ref[t_next], iblk_ref[t_next] * n_sub]
+            ],
+            kv_blk_ref.at[1 - cur],
+            sem,
+            sub_k=page_size,
+            cond=(t + 1 < pl.num_programs(0)) & (ivld_ref[t_next] == 1),
+        )
+        s = s * jnp.float32(scale)
+        if softcap is not None:
+            s = numerics.softcap(s, softcap)
+        s = jnp.clip(s, -numerics.M_CLAMP, numerics.M_CLAMP)
+
+        k_pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        q_pos = q_pos_ref[req]  # (G,)
+        mask = (k_pos < k_len) & (k_pos <= q_pos[:, None])
+        s = jnp.where(mask, s, -jnp.inf)
+
+        _mla.decode_block_update(
+            s, kv_view[...],
+            acc_ref, m_ref, l_ref, n_ref, gamma_ref, s16_ref,
+            d_v=d_v, variant=variant, mm_dtype=q_ref.dtype,
+        )
+
+    @pl.when((last == 1) & (valid == 1))
+    def _finalize():
+        _mla.finalize_decode(o_ref, acc_ref, l_ref, s16_ref, variant=variant)
+        # lse in *standard* units (m is the true running max, l the plain
+        # softmax mass in both variants) so split partials combine
+        # variant-agnostically.
+        l = l_ref[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        lse_ref[...] = jnp.where(
+            l > 0, m_ref[...] + jnp.log(safe), -jnp.inf
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "d_v",
+        "variant",
+        "scale",
+        "block_k",
+        "num_dest_slots",
+        "softcap",
+        "interpret",
+    ),
+)
+def mla_decode_paged_queue_rows(
+    q: jax.Array,  # (B, G, Dk)
+    kv_pages: jax.Array,  # (P, page_size, Dk) physical page pool
+    block_tables: jax.Array,  # (B, W) int32
+    kv_len: jax.Array,  # (B,) int32
+    q_pos: jax.Array,  # (B, G) int32
+    item_req: jax.Array,  # (N,) int32 ┐
+    item_block: jax.Array,  # (N,) int32 │
+    item_dest: jax.Array,  # (N,) int32 │ flat work queue
+    item_first: jax.Array,  # (N,) int32 │ (see decode_schedule)
+    item_last: jax.Array,  # (N,) int32 │
+    item_valid: jax.Array,  # (N,) int32 ┘
+    *,
+    d_v: int = 512,
+    variant: str = "amla",
+    scale: float,
+    block_k: int,
+    num_dest_slots: int,
+    softcap: float | None = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Work-queue paged decode: one grid step per §4.2 KV block work item.
+
+    Returns ``(o_part, lse)`` of shapes ``(num_dest_slots, G, Dv)`` /
+    ``(num_dest_slots, G, 1)`` — normalized partial outputs and
+    log-sum-exps per destination slot, to be merged by
+    ``mla_decode_combine.combine_split_partials`` (a no-op merge when each
+    request has one split; slots of empty requests are never written and
+    are masked out there).
+    """
+    b, g, d_k = q.shape
+    num_pages, page_size, _ = kv_pages.shape
+    if block_k % page_size or block_k < page_size:
+        raise ValueError(
+            f"block_k={block_k} must be a positive multiple of "
+            f"page_size={page_size}"
+        )
+    kv_len = kv_len.astype(jnp.int32)
+    block_tables = clamp_tail_pages(
+        block_tables, kv_len, page_size, num_pages
+    )
+    n_items = item_req.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=9,
+        # Flat 1D queue; scratch-carried state makes it sequential
+        # ("arbitrary"), which is what lets one dest span several items.
+        grid=(n_items,),
+        in_specs=[
+            pl.BlockSpec((None, g, d_k), lambda t, *refs: (refs[3][t], 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, g, d_v), lambda t, *refs: (refs[5][t], 0, 0)),
+            pl.BlockSpec((None, g, 1), lambda t, *refs: (refs[5][t], 0, 0)),
+        ],
+        scratch_shapes=_mla.decode_state_scratch(g, d_v)
+        + [
+            # Double-buffered so the cross-step lookahead can stage the next
+            # item's first page while this item is still being read.
+            pltpu.VMEM((2, block_k, d_k), kv_pages.dtype),
+            pltpu.SemaphoreType.DMA((block_k // page_size,)),
+        ],
+    )
+    kernel = functools.partial(
+        _mla_decode_queue_kernel,
+        scale=scale,
+        d_v=d_v,
+        variant=variant,
+        page_size=page_size,
+        block_k=block_k,
+        softcap=softcap,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((num_dest_slots, g, d_v), jnp.float32),
+            jax.ShapeDtypeStruct((num_dest_slots, g, 1), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(
+        kv_len,
+        q_pos.astype(jnp.int32),
+        block_tables,
+        item_req.astype(jnp.int32),
+        item_block.astype(jnp.int32),
+        item_dest.astype(jnp.int32),
+        item_first.astype(jnp.int32),
+        item_last.astype(jnp.int32),
+        item_valid.astype(jnp.int32),
         q,
         kv_pages,
     )

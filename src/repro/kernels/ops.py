@@ -9,10 +9,13 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels import decode_schedule as _sched
 from repro.kernels import flash_prefill as _prefill
 from repro.kernels import gqa_decode as _gqa
 from repro.kernels import mla_decode as _mla
+from repro.kernels import mla_decode_combine as _combine
 from repro.kernels import mla_decode_paged as _mla_paged
 
 
@@ -61,6 +64,13 @@ def mla_decode(
     return out.reshape(b, sq, hq, d_v)
 
 
+def default_paged_block_k(page_size: int, table_width: int) -> int:
+    """§4.2 KV-block size for the work-queue path: 512 rows (4 pages of
+    128), in units of whole pages, clamped to the table's capacity."""
+    pages_per_block = max(1, _mla.DEFAULT_BLOCK_K // page_size)
+    return page_size * min(pages_per_block, max(table_width, 1))
+
+
 def mla_decode_paged(
     q: jax.Array,  # (B, Sq, Hq, Dk)
     kv_pages: jax.Array,  # (P, page_size, Dk) physical page pool
@@ -74,15 +84,33 @@ def mla_decode_paged(
     causal: bool = True,
     q_offset: jax.Array | None = None,
     softcap: float | None = None,
+    scheduler: str = "queue",
+    block_k: int | None = None,
+    num_splits: int = 1,
+    schedule=None,
 ) -> jax.Array:
     """MLA decode over a paged latent cache (see runtime.kv_cache).
 
     Same contract as :func:`mla_decode` except the latent cache is addressed
     through per-request block tables into a shared page pool; ``kv_len`` is
     mandatory (it is what bounds each request's logical page walk).
+
+    ``scheduler`` picks the execution strategy:
+
+    * ``"queue"`` (default) — flat work-queue kernel: one grid step per
+      §4.2 KV block (``block_k`` rows, default 4 pages) that actually
+      intersects ``kv_len``, long requests split across ``num_splits``
+      flash-decoding slots, partials merged by the combine kernel.  The
+      schedule is built host-side from ``kv_len`` (pass a precomputed
+      ``decode_schedule.DecodeSchedule`` via ``schedule`` to reuse it
+      across serve-loop steps; ``kv_len`` must then describe the same
+      per-request block counts).  Requires concrete (non-traced) ``kv_len``
+      when ``schedule`` is None.
+    * ``"padded"`` — the baseline ``(B, W)`` grid that pads every request
+      to the widest block table.
     """
     b, sq, hq, dk = q.shape
-    kv_len = kv_len.astype(jnp.int32)
+    kv_len = jnp.asarray(kv_len).astype(jnp.int32)
     base = jnp.maximum(kv_len - sq, 0)
     q_pos = base[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
     if q_offset is not None:
@@ -92,16 +120,56 @@ def mla_decode_paged(
         q_pos = jnp.full((b, sq), cap, jnp.int32)  # no causal restriction
     rows_pos = jnp.repeat(q_pos, hq, axis=1)  # (B, Sq*Hq)
     q_rows = q.reshape(b, sq * hq, dk).astype(jnp.bfloat16)
-    out = _mla_paged.mla_decode_paged_rows(
+
+    if scheduler == "padded":
+        out = _mla_paged.mla_decode_paged_rows(
+            q_rows,
+            kv_pages.astype(jnp.bfloat16),
+            block_tables,
+            kv_len,
+            rows_pos,
+            d_v=d_v,
+            variant=variant,
+            scale=scale,
+            softcap=softcap,
+            interpret=interpret,
+        )
+        return out.reshape(b, sq, hq, d_v)
+    if scheduler != "queue":
+        raise ValueError(f"unknown scheduler {scheduler!r}")
+
+    page_size = kv_pages.shape[1]
+    if block_k is None:
+        block_k = default_paged_block_k(page_size, block_tables.shape[1])
+    if schedule is None:
+        schedule = _sched.build_schedule(
+            np.asarray(kv_len), block_k=block_k, num_splits=num_splits
+        )
+    elif schedule.block_k != block_k:
+        raise ValueError(
+            f"schedule was built for block_k={schedule.block_k}, "
+            f"call requested {block_k}"
+        )
+    o_part, lse = _mla_paged.mla_decode_paged_queue_rows(
         q_rows,
         kv_pages.astype(jnp.bfloat16),
         block_tables,
         kv_len,
         rows_pos,
+        *map(jnp.asarray, schedule.prefetch_arrays()),
         d_v=d_v,
         variant=variant,
         scale=scale,
+        block_k=block_k,
+        num_dest_slots=schedule.num_dest_slots,
         softcap=softcap,
+        interpret=interpret,
+    )
+    out = _combine.combine_split_partials(
+        o_part,
+        lse,
+        jnp.asarray(schedule.dest_table),
+        jnp.asarray(schedule.n_splits),
         interpret=interpret,
     )
     return out.reshape(b, sq, hq, d_v)

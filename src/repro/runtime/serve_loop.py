@@ -167,9 +167,14 @@ class PagedDecodeSession:
         variant: str = "amla",
         interpret: bool = False,
         dtype=jnp.bfloat16,
+        scheduler: str = "queue",
+        num_splits: int = 1,
+        block_k: int | None = None,
     ):
-        from repro.runtime.kv_cache import PagedKVCache
+        from repro.kernels import ops
+        from repro.kernels.decode_schedule import DecodeScheduler
         from repro.kernels.mla_decode_paged import DEFAULT_PAGE_SIZE
+        from repro.runtime.kv_cache import PagedKVCache
 
         self.kv = PagedKVCache(
             num_pages=num_pages,
@@ -183,8 +188,27 @@ class PagedDecodeSession:
         # stable across admits/evicts and page-boundary growth (no retrace
         # per step); sized for the worst case of one request owning the pool.
         self.table_width = num_pages
+        self.scheduler = scheduler
+        self.block_k = block_k or ops.default_paged_block_k(
+            self.kv.page_size, self.table_width
+        )
+        # One memoizing scheduler for the whole session: a schedule stays
+        # valid while every live request's KV-block count is unchanged, so
+        # consecutive decode steps (each +1 token) reuse it ~block_k times
+        # before a rebuild.
+        self._scheduler = DecodeScheduler(
+            block_k=self.block_k, num_splits=num_splits
+        )
         self.active: list[int] = []
         self._next_id = 0
+
+    @property
+    def scheduler_stats(self) -> dict:
+        """Schedule reuse counters (see decode_schedule.DecodeScheduler)."""
+        return {
+            "hits": self._scheduler.hits,
+            "rebuilds": self._scheduler.rebuilds,
+        }
 
     def admit(self, latent_prompt) -> int | None:
         """Admit a request whose prompt latents are ``(S, d_k)``.
@@ -227,6 +251,12 @@ class PagedDecodeSession:
         q = jnp.stack([jnp.asarray(queries[r]) for r in rids])[:, None]
         from repro.kernels import ops
 
+        schedule = None
+        if self.scheduler == "queue":
+            # kv_len is host-side numpy here, so scheduling costs no device
+            # sync; the memoized schedule is reused until a request crosses
+            # a block_k boundary or the active set changes.
+            schedule = self._scheduler.schedule(kv_len)
         out = ops.mla_decode_paged(
             q,
             self.kv.pages,
@@ -236,6 +266,9 @@ class PagedDecodeSession:
             variant=self.variant,
             scale=self.scale,
             interpret=self.interpret,
+            scheduler=self.scheduler,
+            block_k=self.block_k if self.scheduler == "queue" else None,
+            schedule=schedule,
         )  # (B, 1, G, d_v)
         return {r: out[i, 0] for i, r in enumerate(rids)}
 

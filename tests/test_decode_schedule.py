@@ -1,0 +1,175 @@
+"""Property tests for the flat work-queue scheduler (kernels/decode_schedule).
+
+The scheduler's contract with the queue kernel is structural, so it is
+tested structurally: the compacted queue must cover exactly the
+``(request, kv_block)`` pairs implied by ``kv_len`` (no duplicates, no
+padding items counted as work), items of one destination slot must be
+contiguous and block-ascending (the kernel's scratch-carried state relies
+on it), and first/last flags must bracket each slot exactly once.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.decode_schedule import (
+    DecodeScheduler,
+    build_schedule,
+    padded_grid_items,
+    queue_grid_items,
+)
+
+
+def _expected_pairs(kv_lens, block_k):
+    return {
+        (r, j)
+        for r, l in enumerate(kv_lens)
+        for j in range(-(-int(l) // block_k))
+    }
+
+
+def _check_schedule_invariants(sched, kv_lens):
+    block_k = sched.block_k
+    real = slice(0, sched.num_items)
+    req = sched.item_req[real]
+    blk = sched.item_block[real]
+    dst = sched.item_dest[real]
+    fst = sched.item_first[real]
+    lst = sched.item_last[real]
+
+    # 1. exact coverage: the real items are precisely the (request, block)
+    #    pairs implied by kv_len — no duplicates, no padding, no tail steps.
+    got_pairs = list(zip(req.tolist(), blk.tolist()))
+    assert len(got_pairs) == len(set(got_pairs)), "duplicate work items"
+    assert set(got_pairs) == _expected_pairs(kv_lens, block_k)
+
+    # 2. all padding is inert and only at the tail.
+    assert np.all(sched.item_valid[real] == 1)
+    assert np.all(sched.item_valid[sched.num_items :] == 0)
+    assert sched.queue_len % 1 == 0 and sched.queue_len >= sched.num_items
+
+    # 3. per-dest contiguity + ordering + exactly-once first/last bracket.
+    for d in np.unique(dst):
+        idx = np.flatnonzero(dst == d)
+        assert np.all(np.diff(idx) == 1), f"dest {d} items not contiguous"
+        assert np.all(np.diff(blk[idx]) == 1), f"dest {d} blocks not ascending"
+        assert fst[idx[0]] == 1 and np.all(fst[idx[1:]] == 0)
+        assert lst[idx[-1]] == 1 and np.all(lst[idx[:-1]] == 0)
+        assert len(np.unique(req[idx])) == 1, "dest spans requests"
+
+    # 4. dest bookkeeping: live dest slots partition each request's blocks;
+    #    empty requests have no splits and no items.
+    for r, l in enumerate(kv_lens):
+        nb = -(-int(l) // block_k)
+        k = int(sched.n_splits[r])
+        assert k == min(sched.num_splits, nb)
+        live = set(sched.dest_table[r, :k].tolist())
+        assert live == set(np.unique(dst[req == r]).tolist()) if nb else not live
+        # padding entries stay inside the request's own slots (warm fetches)
+        assert all(
+            r * sched.num_splits <= d <= r * sched.num_splits + max(k - 1, 0)
+            for d in sched.dest_table[r]
+        )
+    # the padding dump slot is its own, never a live dest
+    assert sched.num_dest_slots == len(kv_lens) * sched.num_splits + 1
+    if sched.num_items < sched.queue_len:
+        assert np.all(
+            sched.item_dest[sched.num_items :] == sched.num_dest_slots - 1
+        )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    num_splits=st.sampled_from([1, 2, 4]),
+    block_k=st.sampled_from([64, 128, 512]),
+)
+def test_schedule_covers_exactly_the_implied_work(seed, num_splits, block_k):
+    rng = np.random.default_rng(seed)
+    b = int(rng.integers(1, 9))
+    # ragged batch incl. empty slots and non-block-aligned lengths
+    kv_lens = [
+        int(x) for x in rng.choice(
+            [0, 1, block_k - 1, block_k, block_k + 1, 5 * block_k + 7,
+             int(rng.integers(0, 16 * block_k))],
+            size=b,
+        )
+    ]
+    sched = build_schedule(kv_lens, block_k=block_k, num_splits=num_splits)
+    _check_schedule_invariants(sched, kv_lens)
+
+
+def test_split_chunks_are_balanced_and_ordered():
+    sched = build_schedule([7 * 128], block_k=128, num_splits=4)
+    sizes = [
+        int(np.sum(sched.item_dest[: sched.num_items] == d))
+        for d in sched.dest_table[0]
+    ]
+    assert sorted(sizes, reverse=True) == sizes  # earlier chunks >= later
+    assert sizes == [2, 2, 2, 1]  # 7 blocks over 4 splits
+    assert max(sizes) - min(sizes) == 1
+
+
+def test_short_request_uses_fewer_splits_than_requested():
+    # 1 block cannot split 4 ways: it must land entirely in one slot.
+    sched = build_schedule([100, 4 * 512], block_k=512, num_splits=4)
+    assert sched.n_splits.tolist() == [1, 4]
+    d0 = sched.dest_table[0, 0]
+    assert np.sum(sched.item_dest[: sched.num_items] == d0) == 1
+
+
+def test_queue_padding_is_bucketed():
+    sched = build_schedule([512] * 3, block_k=512, queue_bucket=16)
+    assert sched.num_items == 3
+    assert sched.queue_len == 16
+    sched = build_schedule([512] * 17, block_k=512, queue_bucket=16)
+    assert sched.queue_len == 32
+
+
+def test_all_empty_batch_still_yields_a_runnable_queue():
+    sched = build_schedule([0, 0], block_k=512)
+    assert sched.num_items == 0
+    assert sched.queue_len >= 1  # kernel grid must be non-empty
+    assert np.all(sched.item_valid == 0)
+    assert sched.n_splits.tolist() == [0, 0]
+
+
+def test_scheduler_reuses_until_block_boundary():
+    s = DecodeScheduler(block_k=128, num_splits=1)
+    a = s.schedule([100, 200])
+    # +1 token inside the same block: same schedule object, no rebuild
+    b = s.schedule([101, 201])
+    assert b is a and s.hits == 1 and s.rebuilds == 1
+    # request 0 crosses a 128 boundary -> rebuild
+    c = s.schedule([129, 201])
+    assert c is not a and s.rebuilds == 2
+    _check_schedule_invariants(c, [129, 201])
+
+
+def test_work_accounting_matches_acceptance_geometry():
+    """ISSUE-2 acceptance scenario: B=8, kv_len in [256, 16384], page 128.
+
+    The flat queue must execute >= 1.5x fewer grid work items than the
+    padded (B, W) grid."""
+    rng = np.random.default_rng(7)
+    kv_lens = [int(x) for x in rng.integers(256, 16384, 8)]
+    page = 128
+    w = max(-(-l // page) for l in kv_lens)
+    sched = build_schedule(kv_lens, block_k=512, num_splits=2)
+    padded = padded_grid_items(kv_lens, w, page)
+    queue = queue_grid_items(sched, kv_lens, page)
+    # acceptance gate: executed grid work items (tiling + compaction)
+    assert padded["grid_steps"] / queue["grid_steps"] >= 1.5
+    assert queue["page_dmas"] == padded["live_pages"] <= padded["page_dmas"]
+
+    # granularity-matched compaction (padded page slots walked vs live
+    # pages) shines where tail waste is structural: a straggler batch pads
+    # every short request to the straggler's table width.
+    kv_lens = [1024] * 7 + [32768]
+    w = max(-(-l // page) for l in kv_lens)
+    sched = build_schedule(kv_lens, block_k=512, num_splits=4)
+    padded = padded_grid_items(kv_lens, w, page)
+    queue = queue_grid_items(sched, kv_lens, page)
+    assert padded["page_slots"] / queue["live_pages"] >= 1.5
+    assert padded["grid_steps"] / queue["grid_steps"] >= 1.5

@@ -57,9 +57,12 @@ GEOMETRIES = [
 ]
 
 
+@pytest.mark.parametrize("scheduler", ["queue", "padded"])
 @pytest.mark.parametrize("variant", ["base", "amla"])
 @pytest.mark.parametrize("b,hq,dk,dv,page,kv_lens", GEOMETRIES)
-def test_paged_matches_contiguous_and_ref(variant, b, hq, dk, dv, page, kv_lens):
+def test_paged_matches_contiguous_and_ref(
+    scheduler, variant, b, hq, dk, dv, page, kv_lens
+):
     sq = 1
     s = max(kv_lens)
     q = bf16ish((b, sq, hq, dk), 1)
@@ -70,7 +73,8 @@ def test_paged_matches_contiguous_and_ref(variant, b, hq, dk, dv, page, kv_lens)
     pool, bt = paginate(c, kv_lens, page, num_pages=num_pages, shuffle_seed=7)
 
     got = ops.mla_decode_paged(
-        q, pool, bt, kv_len, d_v=dv, variant=variant, scale=scale, **INTERP
+        q, pool, bt, kv_len, d_v=dv, variant=variant, scale=scale,
+        scheduler=scheduler, **INTERP
     )
     contig = ops.mla_decode(
         q, c, d_v=dv, variant=variant, scale=scale, kv_len=kv_len, **INTERP
@@ -110,7 +114,8 @@ def test_fragmented_block_table_equals_linear_one(variant):
     np.testing.assert_array_equal(np.asarray(a), np.asarray(z))
 
 
-def test_zero_length_slot_yields_zeros():
+@pytest.mark.parametrize("scheduler", ["queue", "padded"])
+def test_zero_length_slot_yields_zeros(scheduler):
     """Inactive serving slots (kv_len == 0) must produce exact zeros."""
     b, hq, dk, dv, page = 2, 4, 128, 64, 32
     q = bf16ish((b, 1, hq, dk), 5)
@@ -118,10 +123,56 @@ def test_zero_length_slot_yields_zeros():
     kv_len = jnp.asarray([64, 0], jnp.int32)
     pool, bt = paginate(c, [64, 0], page, num_pages=4)
     out = ops.mla_decode_paged(
-        q, pool, bt, kv_len, d_v=dv, scale=0.1, **INTERP
+        q, pool, bt, kv_len, d_v=dv, scale=0.1, scheduler=scheduler, **INTERP
     )
     assert np.abs(np.asarray(out[1])).max() == 0.0
     assert np.abs(np.asarray(out[0])).max() > 0.0
+
+
+def test_clamp_tail_pages_points_at_own_last_page():
+    """Satellite fix: padding table entries must redirect to the request's
+    own last valid page (warm per-request data), never physical page 0."""
+    from repro.kernels.mla_decode_paged import clamp_tail_pages
+
+    bt = jnp.asarray(
+        [[7, 3, 0, 0],    # 2 live pages, tail padded with 0
+         [5, 0, 0, 0],    # 1 live page
+         [0, 0, 0, 0]],   # empty request
+        jnp.int32,
+    )
+    kv_len = jnp.asarray([40, 8, 0], jnp.int32)
+    got = np.asarray(clamp_tail_pages(bt, kv_len, page_size=32, num_pages=9))
+    np.testing.assert_array_equal(
+        got,
+        [[7, 3, 3, 3],   # tail -> last live page 3, not 0
+         [5, 5, 5, 5],
+         [0, 0, 0, 0]],  # empty: first (clamped) entry
+    )
+    # out-of-range ids in the live region are still clamped into the pool
+    wild = jnp.asarray([[42, -3]], jnp.int32)
+    got = np.asarray(
+        clamp_tail_pages(wild, jnp.asarray([64], jnp.int32), 32, 9)
+    )
+    np.testing.assert_array_equal(got, [[8, 0]])
+
+
+def test_paged_session_reuses_schedule_across_steps():
+    """A decode step only changes a request's block count every block_k
+    tokens — the session's scheduler must reuse one schedule in between."""
+    d_k, g = 16, 2
+    sess = PagedDecodeSession(
+        num_pages=8, page_size=4, d_k=d_k, d_v=8, scale=0.25,
+        interpret=True, dtype=jnp.float32,
+    )
+    assert sess.block_k == 32  # table capacity caps the §4.2 block here
+    one = lambda n, v=1.0: np.full((n, d_k), v, np.float32)
+    r1 = sess.admit(one(5))
+    r2 = sess.admit(one(3))
+    for _ in range(4):
+        sess.step({r1: one(g), r2: one(g)}, {r1: one(1)[0], r2: one(1)[0]})
+    stats = sess.scheduler_stats
+    assert stats["rebuilds"] >= 1
+    assert stats["hits"] >= 2  # most steps reuse the memoized schedule
 
 
 def test_mtp_sq2_rows_positions():
