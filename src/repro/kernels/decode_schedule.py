@@ -98,6 +98,7 @@ def build_schedule(
     block_k: int = 512,
     num_splits: int = 1,
     queue_bucket: int = DEFAULT_QUEUE_BUCKET,
+    start_blocks=None,
 ) -> DecodeSchedule:
     """Compact ``(request, kv_block)`` work items from per-request lengths.
 
@@ -106,6 +107,12 @@ def build_schedule(
     chunks one block longer when ``nb % splits != 0``).  ``num_splits == 1``
     degenerates to one run per request — no combine needed beyond the
     identity.
+
+    ``start_blocks`` (per-request, default 0) makes this a **suffix**
+    schedule: request ``r`` only contributes blocks ``[start_blocks[r],
+    nb)`` — the blocks below it are covered elsewhere (the group-batched
+    shared-prefix pass) and merged via the combine kernel.  A request whose
+    start is at/past its block count gets zero items and ``n_splits == 0``.
     """
     if block_k < 1:
         raise ValueError("block_k must be >= 1")
@@ -113,19 +120,26 @@ def build_schedule(
         raise ValueError("num_splits must be >= 1")
     kv_lens = np.asarray(kv_lens, np.int64).reshape(-1)
     b = int(kv_lens.shape[0])
+    if start_blocks is None:
+        start_blocks = np.zeros((b,), np.int64)
+    else:
+        start_blocks = np.asarray(start_blocks, np.int64).reshape(-1)
+        if start_blocks.shape[0] != b:
+            raise ValueError("start_blocks must match kv_lens length")
 
     req, blk, dst, fst, lst = [], [], [], [], []
     dest_table = np.zeros((b, num_splits), np.int32)
     n_splits = np.zeros((b,), np.int32)
     for r in range(b):
-        nb = -(-int(kv_lens[r]) // block_k)
+        nb = -(-int(kv_lens[r]) // block_k) - int(start_blocks[r])
+        nb = max(nb, 0)
         k = min(num_splits, nb)
         n_splits[r] = k
         # Padding dest entries repeat the request's own last live slot so the
         # combine kernel's gated-off block fetches stay on warm data.
         dest_table[r, :] = r * num_splits + max(k - 1, 0)
         base, rem = divmod(nb, max(k, 1))
-        next_block = 0
+        next_block = int(start_blocks[r])
         for j in range(k):
             dest = r * num_splits + j
             dest_table[r, j] = dest
@@ -160,6 +174,239 @@ def build_schedule(
     )
 
 
+# --------------------------------------------------------------------------- #
+# shared-prefix grouping (TyphoonMLA-style group-batched prefix attention)
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixGroups:
+    """Requests grouped by aliased (refcount-shared) prefix page runs.
+
+    Grouping is at **page-id** level: two requests belong together only when
+    their block tables reference the *same physical pages* for a leading run
+    of complete §4.2 KV blocks — which, under ``PagedKVCache.fork``, is
+    exactly "they share a prefix" (page ids are aliased many-to-one; equal
+    content without aliasing never groups, so no content hashing and no
+    false sharing).  Divergence below the first block (a forked boundary
+    page that was copy-on-write'd, or a ragged tail) lands in the suffix
+    schedule instead.
+    """
+
+    group_member: np.ndarray  # (n_groups, gmax) request index, -1 padding
+    group_size: np.ndarray  # (n_groups,)
+    group_rep: np.ndarray  # (n_groups,) representative request (table row)
+    shared_blocks: np.ndarray  # (n_groups,) complete KV blocks shared
+    group_of_req: np.ndarray  # (B,) group id, -1 for ungrouped requests
+    slot_of_req: np.ndarray  # (B,) member slot within the group, -1
+    gmax: int  # max members over groups (stacked-query width)
+    num_groups: int
+
+
+def find_prefix_groups(
+    block_tables,
+    kv_lens,
+    *,
+    page_size: int,
+    block_k: int,
+    min_group: int = 2,
+) -> PrefixGroups:
+    """Group requests whose tables alias the same leading KV-block pages.
+
+    A block is shared by a group when every member's table points at the
+    identical page-id tuple for it **and** the block is complete for every
+    member (``(j+1) * block_k <= kv_len``) — completeness guarantees the
+    group-prefix kernel needs no per-member masking inside shared blocks.
+    Members joining on block 0 but diverging later share only the common
+    run (min over members); requests with no complete first block, or whose
+    first block nobody else aliases, stay ungrouped.
+    """
+    if block_k % page_size or block_k < page_size:
+        raise ValueError(
+            f"block_k={block_k} must be a positive multiple of "
+            f"page_size={page_size}"
+        )
+    bt = np.asarray(block_tables)
+    kv = np.asarray(kv_lens, np.int64).reshape(-1)
+    b = int(kv.shape[0])
+    n_sub = block_k // page_size
+    sigs: list[list[tuple]] = []
+    for r in range(b):
+        nb_full = min(int(kv[r]) // block_k, bt.shape[1] // n_sub)
+        sigs.append(
+            [
+                tuple(bt[r, j * n_sub : (j + 1) * n_sub].tolist())
+                for j in range(nb_full)
+            ]
+        )
+    by_first: dict[tuple, list[int]] = {}
+    for r in range(b):
+        if sigs[r]:
+            by_first.setdefault(sigs[r][0], []).append(r)
+
+    members_list, shared_list = [], []
+    for members in by_first.values():
+        if len(members) < max(min_group, 2):
+            continue
+        rep = members[0]
+        n = len(sigs[rep])
+        for m in members[1:]:
+            k = 0
+            mlim = min(n, len(sigs[m]))
+            while k < mlim and sigs[m][k] == sigs[rep][k]:
+                k += 1
+            n = min(n, k)
+        if n >= 1:
+            members_list.append(members)
+            shared_list.append(n)
+
+    num_groups = len(members_list)
+    gmax = max((len(m) for m in members_list), default=0)
+    group_member = np.full((num_groups, max(gmax, 1)), -1, np.int32)
+    group_size = np.zeros((num_groups,), np.int32)
+    group_rep = np.zeros((num_groups,), np.int32)
+    shared_blocks = np.zeros((num_groups,), np.int32)
+    group_of_req = np.full((b,), -1, np.int32)
+    slot_of_req = np.full((b,), -1, np.int32)
+    for g, members in enumerate(members_list):
+        group_size[g] = len(members)
+        group_rep[g] = members[0]
+        shared_blocks[g] = shared_list[g]
+        for i, r in enumerate(members):
+            group_member[g, i] = r
+            group_of_req[r] = g
+            slot_of_req[r] = i
+    return PrefixGroups(
+        group_member=group_member,
+        group_size=group_size,
+        group_rep=group_rep,
+        shared_blocks=shared_blocks,
+        group_of_req=group_of_req,
+        slot_of_req=slot_of_req,
+        gmax=gmax,
+        num_groups=num_groups,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixSchedule:
+    """Two-pass decode schedule: group-batched prefix + per-request suffix.
+
+    ``prefix`` treats each group as a *virtual request* of
+    ``gmax * G`` stacked query rows whose kv is the shared prefix
+    (``shared_blocks[g] * block_k`` rows read through the representative
+    member's table row) — one work item per ``(group, kv_block)``, so a
+    shared block is DMA'd and scored **once** per group instead of once per
+    member.  ``suffix`` is a plain :func:`build_schedule` whose
+    ``start_blocks`` skip each grouped request past its shared run.  The
+    partials of both passes merge in the combine kernel via
+    :meth:`hetero_dest_tables`.
+    """
+
+    suffix: DecodeSchedule
+    prefix: DecodeSchedule | None  # over groups; None when num_groups == 0
+    groups: PrefixGroups
+    start_blocks: np.ndarray  # (B,) suffix start block per request
+    prefix_lens: np.ndarray  # (n_groups,) shared rows per group
+    block_k: int
+
+    @property
+    def num_groups(self) -> int:
+        return self.groups.num_groups
+
+    def hetero_dest_tables(self) -> tuple[np.ndarray, np.ndarray]:
+        """Combine-kernel tables over the **concatenated** partial array
+        ``[suffix slots ; prefix member rows]``.
+
+        Suffix partials occupy slots ``[0, suffix.num_dest_slots)``; the
+        prefix pass's ``(D_pref, gmax*G, ·)`` output, reshaped to
+        ``(D_pref * gmax, G, ·)``, appends member rows at
+        ``suffix.num_dest_slots + dest * gmax + slot``.  Returns
+        ``(dest_table (B, num_splits + 1), n_splits (B,))`` — each grouped
+        request combines its suffix splits plus exactly one prefix partial.
+        """
+        suf = self.suffix
+        b = suf.num_requests
+        d_suf = suf.num_dest_slots
+        gmax = max(self.groups.gmax, 1)
+        s_ext = suf.num_splits + 1
+        dest = np.zeros((b, s_ext), np.int32)
+        n_ext = np.zeros((b,), np.int32)
+        for r in range(b):
+            slots = [
+                int(suf.dest_table[r, j]) for j in range(int(suf.n_splits[r]))
+            ]
+            g = int(self.groups.group_of_req[r])
+            if g >= 0 and self.groups.shared_blocks[g] > 0:
+                # prefix pass dest slot for group g is g (num_splits == 1)
+                slots.append(
+                    d_suf + g * gmax + int(self.groups.slot_of_req[r])
+                )
+            n_ext[r] = len(slots)
+            if not slots:  # kv_len == 0: gated off, fetch warm slot 0
+                slots = [0]
+            dest[r] = np.asarray(
+                (slots + [slots[-1]] * s_ext)[:s_ext], np.int32
+            )
+        return dest, n_ext
+
+
+def build_prefix_schedule(
+    kv_lens,
+    block_tables,
+    *,
+    page_size: int,
+    block_k: int = 512,
+    num_splits: int = 1,
+    queue_bucket: int = DEFAULT_QUEUE_BUCKET,
+    min_group: int = 2,
+) -> PrefixSchedule:
+    """Group-batched shared-prefix schedule over ``(kv_lens, block_tables)``.
+
+    Host-side like everything in this module; cost is O(total pages).  With
+    no aliased prefixes anywhere this degenerates to the plain schedule
+    (empty prefix pass, suffix pass == :func:`build_schedule`).
+    """
+    kv = np.asarray(kv_lens, np.int64).reshape(-1)
+    groups = find_prefix_groups(
+        block_tables,
+        kv,
+        page_size=page_size,
+        block_k=block_k,
+        min_group=min_group,
+    )
+    start_blocks = np.zeros((kv.shape[0],), np.int64)
+    for g in range(groups.num_groups):
+        for i in range(int(groups.group_size[g])):
+            start_blocks[groups.group_member[g, i]] = groups.shared_blocks[g]
+    suffix = build_schedule(
+        kv,
+        block_k=block_k,
+        num_splits=num_splits,
+        queue_bucket=queue_bucket,
+        start_blocks=start_blocks,
+    )
+    prefix_lens = groups.shared_blocks.astype(np.int64) * block_k
+    prefix = None
+    if groups.num_groups:
+        # Prefix items never split: one dest slot per group keeps the
+        # stacked-query state walk trivially contiguous.
+        prefix = build_schedule(
+            prefix_lens,
+            block_k=block_k,
+            num_splits=1,
+            queue_bucket=queue_bucket,
+        )
+    return PrefixSchedule(
+        suffix=suffix,
+        prefix=prefix,
+        groups=groups,
+        start_blocks=start_blocks,
+        prefix_lens=prefix_lens,
+        block_k=block_k,
+    )
+
+
 class DecodeScheduler:
     """Memoizing schedule factory for a serve loop.
 
@@ -169,6 +416,16 @@ class DecodeScheduler:
     shapes) serves ``~block_k`` consecutive steps.  ``schedule()`` rebuilds
     only when the block signature of the batch changes and counts hits for
     the benchmarks.
+
+    **Invalidation.** The block signature alone cannot see a serving slot
+    being *recycled*: evicting a request and admitting another of the same
+    block count mid-stream yields an identical signature, yet the batch is
+    a different set of requests (and for prefix sharing, a different page
+    aliasing structure).  Callers therefore pass ``extra_key`` — any
+    hashable batch-identity token, e.g. the tuple of live request ids — and
+    a change in it forces a rebuild.  ``schedule_prefix()`` additionally
+    keys on the page ids that grouping inspects, so COW faults and pool
+    churn can never serve a stale group structure.
     """
 
     def __init__(
@@ -177,30 +434,87 @@ class DecodeScheduler:
         block_k: int = 512,
         num_splits: int = 1,
         queue_bucket: int = DEFAULT_QUEUE_BUCKET,
+        min_group: int = 2,
     ):
         self.block_k = block_k
         self.num_splits = num_splits
         self.queue_bucket = queue_bucket
+        self.min_group = min_group
         self._key: tuple | None = None
-        self._cached: DecodeSchedule | None = None
+        self._cached: DecodeSchedule | PrefixSchedule | None = None
         self.hits = 0
         self.rebuilds = 0
 
-    def schedule(self, kv_lens) -> DecodeSchedule:
-        kv_lens = np.asarray(kv_lens).reshape(-1)
-        key = (kv_lens.shape[0], _block_signature(kv_lens, self.block_k))
+    def _lookup(self, key, build):
         if key == self._key and self._cached is not None:
             self.hits += 1
             return self._cached
         self.rebuilds += 1
-        self._cached = build_schedule(
-            kv_lens,
-            block_k=self.block_k,
-            num_splits=self.num_splits,
-            queue_bucket=self.queue_bucket,
-        )
+        self._cached = build()
         self._key = key
         return self._cached
+
+    def schedule(self, kv_lens, extra_key=None) -> DecodeSchedule:
+        kv_lens = np.asarray(kv_lens).reshape(-1)
+        key = (
+            "plain",
+            kv_lens.shape[0],
+            _block_signature(kv_lens, self.block_k),
+            extra_key,
+        )
+        return self._lookup(
+            key,
+            lambda: build_schedule(
+                kv_lens,
+                block_k=self.block_k,
+                num_splits=self.num_splits,
+                queue_bucket=self.queue_bucket,
+            ),
+        )
+
+    def schedule_prefix(
+        self, kv_lens, block_tables, *, page_size: int, extra_key=None
+    ) -> PrefixSchedule:
+        """Memoized :func:`build_prefix_schedule`.
+
+        Valid while block counts AND the page ids visible to grouping (each
+        request's complete-block table run) are unchanged; decode steps
+        within a block reuse it just like the plain schedule.
+        """
+        kv_lens = np.asarray(kv_lens).reshape(-1)
+        bt = np.asarray(block_tables)
+        n_sub = max(self.block_k // page_size, 1)
+        # Only the complete-block table region feeds grouping, and it is
+        # raw-bytes hashed (C-speed memcpy, not Python int tuples): this
+        # key is recomputed on every decode step, so it must stay cheap at
+        # 16k-context page counts.  (A COW fault can only swap the partial
+        # boundary page — never a complete-block page — so within a stable
+        # block signature this region changes only with the live set,
+        # which extra_key already carries; the bytes are the standalone
+        # safety net.)
+        page_sig = tuple(
+            bt[r, : (int(kv_lens[r]) // self.block_k) * n_sub].tobytes()
+            for r in range(kv_lens.shape[0])
+        )
+        key = (
+            "prefix",
+            kv_lens.shape[0],
+            _block_signature(kv_lens, self.block_k),
+            page_sig,
+            extra_key,
+        )
+        return self._lookup(
+            key,
+            lambda: build_prefix_schedule(
+                kv_lens,
+                bt,
+                page_size=page_size,
+                block_k=self.block_k,
+                num_splits=self.num_splits,
+                queue_bucket=self.queue_bucket,
+                min_group=self.min_group,
+            ),
+        )
 
 
 # --------------------------------------------------------------------------- #
@@ -252,4 +566,48 @@ def queue_grid_items(schedule: DecodeSchedule, kv_lens, page_size: int) -> dict:
         "executed_items": schedule.num_items,
         "page_dmas": live_pages,
         "live_pages": live_pages,
+    }
+
+
+def prefix_queue_grid_items(
+    ps: PrefixSchedule, kv_lens, page_size: int
+) -> dict:
+    """Work executed by the two-pass shared-prefix schedule on this batch.
+
+    The headline number: ``prefix_page_dmas`` is paid **once per group**
+    (the group-prefix kernel stages each shared block through the preload
+    pipeline exactly once for all members), against
+    ``unshared_prefix_page_dmas`` = the same pages times group size that
+    the plain queue would fetch — a ~G× DMA reduction at group size G.
+    ``live_pages`` stays the *logical* pages attended (per member), so it
+    exceeds ``page_dmas`` exactly when sharing dedups fetches.
+    """
+    kv_lens = np.asarray(kv_lens, np.int64).reshape(-1)
+    n_sub = max(ps.block_k // page_size, 1)
+    live_pages = int(sum(-(-int(l) // page_size) for l in kv_lens))
+    suffix_pages = int(
+        sum(
+            max(-(-int(l) // page_size) - int(s) * n_sub, 0)
+            for l, s in zip(kv_lens, ps.start_blocks)
+        )
+    )
+    prefix_pages = int(np.sum(ps.groups.shared_blocks)) * n_sub
+    unshared_prefix_pages = (
+        int(np.sum(ps.groups.shared_blocks * ps.groups.group_size)) * n_sub
+    )
+    grid_steps = ps.suffix.queue_len + (
+        ps.prefix.queue_len if ps.prefix is not None else 0
+    )
+    executed = ps.suffix.num_items + (
+        ps.prefix.num_items if ps.prefix is not None else 0
+    )
+    return {
+        "grid_steps": grid_steps,
+        "executed_items": executed,
+        "page_dmas": suffix_pages + prefix_pages,
+        "live_pages": live_pages,
+        "prefix_page_dmas": prefix_pages,
+        "unshared_prefix_page_dmas": unshared_prefix_pages,
+        "num_groups": ps.num_groups,
+        "grouped_requests": int(np.sum(ps.groups.group_of_req >= 0)),
     }

@@ -126,3 +126,32 @@ def combine_split_partials(
         o_part,
         lse,
     )
+
+
+def combine_hetero_partials(
+    o_parts: list[jax.Array],  # each (Di, G, Dv) f32 normalized partials
+    lse_parts: list[jax.Array],  # each (Di, G, 1) f32
+    dest_table: jax.Array,  # (B, S) slot ids into the concatenated array
+    n_splits: jax.Array,  # (B,) live partials per request
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Merge partials drawn from **heterogeneous sources** — e.g. a
+    per-request split-KV suffix pass and a group-batched shared-prefix pass.
+
+    The LSE-weighted merge never cared *how* the KV was partitioned, only
+    that each partial is normalized with its log-sum-exp; so generalizing
+    from split-KV to prefix/suffix is pure indexing: concatenate the
+    partial arrays along the slot axis and point ``dest_table`` into the
+    concatenated layout (``decode_schedule.PrefixSchedule
+    .hetero_dest_tables`` builds exactly these tables).  Slot counts per
+    request may be ragged; padding columns must repeat a live slot (warm
+    gated-off fetches) as in the homogeneous case.
+    """
+    o_all = o_parts[0] if len(o_parts) == 1 else jnp.concatenate(o_parts, 0)
+    lse_all = (
+        lse_parts[0] if len(lse_parts) == 1 else jnp.concatenate(lse_parts, 0)
+    )
+    return combine_split_partials(
+        o_all, lse_all, dest_table, n_splits, interpret=interpret
+    )

@@ -21,6 +21,23 @@ the per-page score matmul, and all four score strips fold into a *single*
 AMLA state update.  Pages past ``kv_len`` are zero-filled in VMEM — a ragged
 tail costs vector stores, not HBM bandwidth.
 
+**Group-prefix kernel** (:func:`mla_decode_paged_group_prefix`, the
+shared-prefix fast path) — TyphoonMLA-style group-batched prefix attention.
+Requests whose block tables alias the same leading pages (forked system
+prompts, n-best sampling — see ``runtime/kv_cache.fork``) are grouped
+host-side (:func:`repro.kernels.decode_schedule.find_prefix_groups`); each
+group becomes a *virtual request* whose query block stacks **all members'
+query rows** and whose KV is the shared prefix read through one member's
+table row.  The same work-queue kernel then stages each shared KV block
+through the preload pipeline **once** per group and folds it into a single
+AMLA MUL-by-ADD state update over the stacked queries — the G per-member
+bandwidth-bound (G_q × 576) GEMVs of the unshared path become one
+compute-dense (G·G_q × 576) GEMM per block, and the block's four page DMAs
+are paid once instead of G times.  Per-member partial ``(o, lse)`` rows come
+back out by reshaping the stacked outputs; the combine kernel merges them
+with the member's own suffix partials (split-KV combine generalized to
+heterogeneous prefix/suffix partials).
+
 **Padded-grid kernel** (:func:`mla_decode_paged_rows`, kept as the simple
 baseline and work-accounting reference) — ``grid = (B, W)`` walks every
 request over the *longest* block table, one page per step, resolved
@@ -464,4 +481,92 @@ def mla_decode_paged_queue_rows(
         item_valid.astype(jnp.int32),
         q,
         kv_pages,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# group-batched shared-prefix kernel — stacked queries, one DMA per block
+# --------------------------------------------------------------------------- #
+
+
+def mla_decode_paged_group_prefix(
+    q: jax.Array,  # (B, G, Dk) per-request query rows
+    kv_pages: jax.Array,  # (P, page_size, Dk) physical page pool
+    block_tables: jax.Array,  # (B, W) int32
+    q_pos: jax.Array,  # (B, G) int32 real query positions
+    group_member: jax.Array,  # (n_groups, gmax) int32 request idx, -1 pad
+    group_rep: jax.Array,  # (n_groups,) int32 table row per group
+    prefix_lens: jax.Array,  # (n_groups,) int32 shared rows (block multiple)
+    item_req: jax.Array,  # ┐
+    item_block: jax.Array,  # │
+    item_dest: jax.Array,  # │ prefix work queue: one item per
+    item_first: jax.Array,  # │ (group, shared kv_block)
+    item_last: jax.Array,  # │
+    item_valid: jax.Array,  # ┘
+    *,
+    d_v: int = 512,
+    variant: str = "amla",
+    scale: float,
+    block_k: int,
+    num_dest_slots: int,
+    softcap: float | None = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Shared-prefix attention computed **once per group** over stacked
+    queries.
+
+    Each group is presented to the work-queue kernel as one virtual request:
+    its query block is the concatenation of every member's ``G`` rows
+    (``gmax * G`` rows, zero-padded past the member count with fully-masked
+    positions), its block table is the representative member's row (the
+    shared pages are aliased, so any member's row names the same physical
+    pages), and its ``kv_len`` is the group's shared-prefix length.  One
+    grid step per ``(group, kv_block)`` stages the block's pages through the
+    preload pipeline once and runs a single AMLA state update against all
+    members — the MUL-by-ADD machinery is untouched; only the work/geometry
+    changes.
+
+    Returns per-**member** partials ``(o, lse)`` of shapes
+    ``(num_dest_slots * gmax, G, Dv)`` / ``(..., G, 1)``: row
+    ``dest * gmax + slot`` is member ``slot``'s normalized prefix partial,
+    ready to concatenate after the suffix partial array for the combine
+    kernel (see ``decode_schedule.PrefixSchedule.hetero_dest_tables``).
+    Padded member rows finalize to zeros with ``lse == -inf`` and are never
+    referenced by a dest table.
+    """
+    b, g, d_k = q.shape
+    n_groups, gmax = group_member.shape
+    member = jnp.clip(group_member, 0, b - 1)
+    live = group_member >= 0
+    # Stack member query rows: (n_groups, gmax*G, Dk).  Padded slots carry
+    # q_pos = -1, which masks every key -> empty softmax -> lse = -inf.
+    q_grp = jnp.take(q, member, axis=0).reshape(n_groups, gmax * g, d_k)
+    pos_grp = jnp.where(
+        live[:, :, None], jnp.take(q_pos, member, axis=0), -1
+    ).reshape(n_groups, gmax * g)
+    bt_grp = jnp.take(block_tables, group_rep, axis=0)
+    o_grp, lse_grp = mla_decode_paged_queue_rows(
+        q_grp,
+        kv_pages,
+        bt_grp,
+        prefix_lens.astype(jnp.int32),
+        pos_grp,
+        item_req,
+        item_block,
+        item_dest,
+        item_first,
+        item_last,
+        item_valid,
+        d_v=d_v,
+        variant=variant,
+        scale=scale,
+        block_k=block_k,
+        num_dest_slots=num_dest_slots,
+        softcap=softcap,
+        interpret=interpret,
+    )
+    # (D_pref, gmax*G, ·) -> per-member rows (D_pref*gmax, G, ·)
+    return (
+        o_grp.reshape(num_dest_slots * gmax, g, d_v),
+        lse_grp.reshape(num_dest_slots * gmax, g, 1),
     )

@@ -71,6 +71,49 @@ def default_paged_block_k(page_size: int, table_width: int) -> int:
     return page_size * min(pages_per_block, max(table_width, 1))
 
 
+def _validate_paged_geometry(q, kv_pages, block_tables, kv_len, block_k):
+    """Fail fast, with actionable messages, on geometry the Pallas kernels
+    would otherwise reject deep inside a trace (or worse, read garbage)."""
+    b = q.shape[0]
+    num_pages, page_size, dk_pages = kv_pages.shape
+    if block_tables.ndim != 2 or block_tables.shape[0] != b:
+        raise ValueError(
+            f"block_tables must be (B={b}, W); got {block_tables.shape} — "
+            f"one row of logical->physical page ids per request"
+        )
+    w = block_tables.shape[1]
+    if w < 1:
+        raise ValueError(
+            "block_tables must have at least one page column (W >= 1); "
+            "use PagedKVCache.block_table, which pads empty sequences to "
+            "width 1"
+        )
+    if q.shape[-1] != dk_pages:
+        raise ValueError(
+            f"q feature width {q.shape[-1]} != page row width {dk_pages}; "
+            f"queries and the latent page pool must share D_k"
+        )
+    if block_k is not None and (block_k < page_size or block_k % page_size):
+        raise ValueError(
+            f"block_k={block_k} must be a positive multiple of the pool's "
+            f"page_size={page_size} (one work item covers whole pages; "
+            f"e.g. block_k={max(block_k // page_size, 1) * page_size or page_size}"
+            f" or leave block_k=None for the §4.2 default)"
+        )
+    # Table-width bound: every valid token must resolve to a table entry.
+    # kv_len is host data on the serving path; skip silently when traced.
+    if not isinstance(kv_len, jax.core.Tracer):
+        lens = np.asarray(kv_len).reshape(-1)
+        if lens.size and int(lens.max()) > w * page_size:
+            worst = int(np.argmax(lens))
+            raise ValueError(
+                f"kv_len[{worst}]={int(lens.max())} exceeds the block "
+                f"table's reach W*page_size={w}*{page_size}={w * page_size}"
+                f" rows; widen block_tables (PagedKVCache.block_table("
+                f"width=...)) or check kv_len bookkeeping"
+            )
+
+
 def mla_decode_paged(
     q: jax.Array,  # (B, Sq, Hq, Dk)
     kv_pages: jax.Array,  # (P, page_size, Dk) physical page pool
@@ -88,6 +131,8 @@ def mla_decode_paged(
     block_k: int | None = None,
     num_splits: int = 1,
     schedule=None,
+    prefix_sharing: bool = False,
+    min_group: int = 2,
 ) -> jax.Array:
     """MLA decode over a paged latent cache (see runtime.kv_cache).
 
@@ -108,8 +153,20 @@ def mla_decode_paged(
       when ``schedule`` is None.
     * ``"padded"`` — the baseline ``(B, W)`` grid that pads every request
       to the widest block table.
+
+    ``prefix_sharing=True`` (queue scheduler only) additionally runs the
+    TyphoonMLA-style **group-batched prefix pass**: requests whose block
+    tables alias the same leading pages (``PagedKVCache.fork``) have their
+    shared KV blocks attended once per *group* over stacked queries
+    (``mla_decode_paged_group_prefix``), per-request suffixes attended as
+    usual, and the two partial sets merged exactly by the combine kernel.
+    Groups need at least ``min_group`` members.  Pass a precomputed
+    ``decode_schedule.PrefixSchedule`` via ``schedule`` to reuse grouping
+    across steps; with no aliasing in the batch the path degenerates to the
+    plain queue (at the cost of one extra gated combine column).
     """
     b, sq, hq, dk = q.shape
+    _validate_paged_geometry(q, kv_pages, block_tables, kv_len, block_k)
     kv_len = jnp.asarray(kv_len).astype(jnp.int32)
     base = jnp.maximum(kv_len - sq, 0)
     q_pos = base[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
@@ -122,6 +179,12 @@ def mla_decode_paged(
     q_rows = q.reshape(b, sq * hq, dk).astype(jnp.bfloat16)
 
     if scheduler == "padded":
+        if prefix_sharing:
+            raise ValueError(
+                "prefix_sharing requires scheduler='queue' (the padded "
+                "(B, W) grid walks every request independently and cannot "
+                "batch shared-prefix groups)"
+            )
         out = _mla_paged.mla_decode_paged_rows(
             q_rows,
             kv_pages.astype(jnp.bfloat16),
@@ -141,18 +204,85 @@ def mla_decode_paged(
     page_size = kv_pages.shape[1]
     if block_k is None:
         block_k = default_paged_block_k(page_size, block_tables.shape[1])
-    if schedule is None:
-        schedule = _sched.build_schedule(
-            np.asarray(kv_len), block_k=block_k, num_splits=num_splits
+    if isinstance(schedule, _sched.PrefixSchedule):
+        prefix_sharing = True
+    elif schedule is not None and prefix_sharing:
+        raise ValueError(
+            "prefix_sharing=True needs a decode_schedule.PrefixSchedule "
+            f"(got {type(schedule).__name__}); build one with "
+            "build_prefix_schedule or let schedule=None"
         )
-    elif schedule.block_k != block_k:
+    if schedule is not None and schedule.block_k != block_k:
         raise ValueError(
             f"schedule was built for block_k={schedule.block_k}, "
             f"call requested {block_k}"
         )
+    pool = kv_pages.astype(jnp.bfloat16)
+
+    if prefix_sharing:
+        ps = schedule
+        if ps is None:
+            ps = _sched.build_prefix_schedule(
+                np.asarray(kv_len),
+                np.asarray(block_tables),
+                page_size=page_size,
+                block_k=block_k,
+                num_splits=num_splits,
+                min_group=min_group,
+            )
+        o_suf, lse_suf = _mla_paged.mla_decode_paged_queue_rows(
+            q_rows,
+            pool,
+            block_tables,
+            kv_len,
+            rows_pos,
+            *map(jnp.asarray, ps.suffix.prefetch_arrays()),
+            d_v=d_v,
+            variant=variant,
+            scale=scale,
+            block_k=block_k,
+            num_dest_slots=ps.suffix.num_dest_slots,
+            softcap=softcap,
+            interpret=interpret,
+        )
+        o_parts, lse_parts = [o_suf], [lse_suf]
+        if ps.num_groups:
+            o_pref, lse_pref = _mla_paged.mla_decode_paged_group_prefix(
+                q_rows,
+                pool,
+                block_tables,
+                rows_pos,
+                jnp.asarray(ps.groups.group_member),
+                jnp.asarray(ps.groups.group_rep),
+                jnp.asarray(ps.prefix_lens, dtype=jnp.int32),
+                *map(jnp.asarray, ps.prefix.prefetch_arrays()),
+                d_v=d_v,
+                variant=variant,
+                scale=scale,
+                block_k=block_k,
+                num_dest_slots=ps.prefix.num_dest_slots,
+                softcap=softcap,
+                interpret=interpret,
+            )
+            o_parts.append(o_pref)
+            lse_parts.append(lse_pref)
+        dest, n_live = ps.hetero_dest_tables()
+        out = _combine.combine_hetero_partials(
+            o_parts,
+            lse_parts,
+            jnp.asarray(dest),
+            jnp.asarray(n_live),
+            interpret=interpret,
+        )
+        return out.reshape(b, sq, hq, d_v)
+
+    if schedule is None:
+        schedule = _sched.build_schedule(
+            np.asarray(kv_len), block_k=block_k, num_splits=num_splits
+        )
     o_part, lse = _mla_paged.mla_decode_paged_queue_rows(
         q_rows,
-        kv_pages.astype(jnp.bfloat16),
+        pool,
         block_tables,
         kv_len,
         rows_pos,

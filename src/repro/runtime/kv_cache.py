@@ -11,6 +11,15 @@ control is a simple free-page count — the two properties contiguous
 per-slot caches (runtime.serve_loop.ServingSession) lack: there, every slot
 reserves ``max_len`` rows up front.
 
+Pages are **refcounted**, so block tables may reference a physical page
+many-to-one: :meth:`PagedKVCache.fork` aliases a prefix of one request's
+pages into a new request (shared system prompt, multi-turn branch, n-best
+sampling) without copying a single row.  A shared page is copied lazily —
+**copy-on-write** — only when an append actually writes into it, which can
+only happen on the partially-filled boundary page (full shared pages are
+never written again: appends only ever touch the tail).  ``free`` decrements
+refcounts and recycles a page only when its last owner releases it.
+
 Page bookkeeping (free list, page lists, lengths) is host-side Python —
 it is O(pages touched) per call and never enters a jit trace.  Only the page
 pool itself lives on device.
@@ -40,8 +49,19 @@ def _write_rows(pages, rows, pid, off):
     )
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_page(pages, dst_pid, src_pid):
+    """Copy one physical page (the copy-on-write fault path)."""
+    page = jax.lax.dynamic_slice_in_dim(pages, src_pid, 1, axis=0)
+    return jax.lax.dynamic_update_slice(pages, page, (dst_pid, 0, 0))
+
+
 class OutOfPagesError(RuntimeError):
     """Raised when an append needs more pages than the pool has free."""
+
+
+class DoubleFreeError(RuntimeError):
+    """Raised (debug mode only) when a request id is freed twice."""
 
 
 class PagedKVCache:
@@ -53,6 +73,8 @@ class PagedKVCache:
     page_size:  latent rows per page.
     width:      row width (576 = 512 latent + 64 rope for DeepSeek MLA).
     dtype:      storage dtype of the pool (bf16 in serving).
+    debug:      when True, misuse that is silently tolerated in production
+                (double-free) raises instead.
     """
 
     def __init__(
@@ -62,12 +84,14 @@ class PagedKVCache:
         page_size: int = DEFAULT_PAGE_SIZE,
         width: int = 576,
         dtype=jnp.bfloat16,
+        debug: bool = False,
     ):
         if num_pages < 1 or page_size < 1:
             raise ValueError("need at least one page of at least one row")
         self.num_pages = num_pages
         self.page_size = page_size
         self.width = width
+        self.debug = debug
         self.pages = jnp.zeros((num_pages, page_size, width), dtype)
         # FIFO free list: freed pages are reused in release order, so a
         # long-lived session naturally produces fragmented (non-contiguous,
@@ -75,6 +99,9 @@ class PagedKVCache:
         self._free: deque[int] = deque(range(num_pages))
         self._seq_pages: dict[int, list[int]] = {}
         self._seq_len: dict[int, int] = {}
+        # Owners per physical page: 0 = on the free list, >1 = aliased by a
+        # fork.  Host-side numpy, like all page bookkeeping.
+        self._ref = np.zeros((num_pages,), np.int32)
 
     # ------------------------------------------------------------------ #
     # bookkeeping
@@ -87,10 +114,22 @@ class PagedKVCache:
         return -(-n_tokens // self.page_size)
 
     def pages_needed_for_append(self, rid: int | None, n_tokens: int) -> int:
-        """New pages an append of ``n_tokens`` to ``rid`` (or a new seq) grabs."""
+        """New pages an append of ``n_tokens`` to ``rid`` (or a new seq) grabs.
+
+        Includes the copy-on-write page when the append's first rows land in
+        a page that is aliased by another request (``refcount > 1``).
+        """
         used = self._seq_len.get(rid, 0) if rid is not None else 0
         have = len(self._seq_pages.get(rid, [])) if rid is not None else 0
-        return self.pages_needed(used + n_tokens) - have
+        need = self.pages_needed(used + n_tokens) - have
+        if (
+            rid is not None
+            and n_tokens > 0
+            and used % self.page_size
+            and self._ref[self._seq_pages[rid][used // self.page_size]] > 1
+        ):
+            need += 1  # COW copy of the shared boundary page
+        return need
 
     def has_room(self, rid: int | None, n_tokens: int) -> bool:
         """Can ``n_tokens`` more rows be appended to ``rid`` (or a new seq)?"""
@@ -103,11 +142,64 @@ class PagedKVCache:
         self._seq_pages[rid] = []
         self._seq_len[rid] = 0
 
-    def free(self, rid: int) -> None:
-        """Return all of ``rid``'s pages to the free list."""
-        for pid in self._seq_pages.pop(rid):
+    def _grab_page(self) -> int:
+        pid = self._free.popleft()
+        assert self._ref[pid] == 0, f"free-list page {pid} still referenced"
+        self._ref[pid] = 1
+        return pid
+
+    def _release_page(self, pid: int) -> None:
+        self._ref[pid] -= 1
+        assert self._ref[pid] >= 0, f"page {pid} refcount underflow"
+        if self._ref[pid] == 0:
             self._free.append(pid)
+
+    def free(self, rid: int) -> None:
+        """Release ``rid``'s pages; each returns to the free list only when
+        its last owner lets go (forked prefixes alias pages many-to-one).
+
+        Idempotent: freeing an id that is not live is a no-op in production
+        (double-frees must not re-enqueue live pages onto the free list);
+        with ``debug=True`` it raises :class:`DoubleFreeError` instead.
+        """
+        pages = self._seq_pages.pop(rid, None)
+        if pages is None:
+            if self.debug:
+                raise DoubleFreeError(
+                    f"free({rid}): request is not live — it was already "
+                    f"freed or never allocated"
+                )
+            return
+        for pid in pages:
+            self._release_page(pid)
         del self._seq_len[rid]
+
+    def fork(self, src: int, dst: int, prefix_len: int | None = None) -> None:
+        """Create ``dst`` sharing ``src``'s first ``prefix_len`` rows.
+
+        Every page that intersects the prefix — including a partially-filled
+        boundary page — is *aliased* (refcount bumped), so a fork allocates
+        zero pages and copies zero rows.  Rows of the boundary page past
+        ``prefix_len`` are dead in ``dst`` (masked by its ``seq_len``) until
+        an append overwrites them; that append triggers the copy-on-write in
+        :meth:`append`, as does a ``src`` append into its now-shared tail.
+        ``prefix_len`` defaults to all of ``src``.
+        """
+        if dst in self._seq_pages:
+            raise KeyError(f"sequence {dst} already allocated")
+        src_len = self._seq_len[src]  # KeyError if src is not live
+        if prefix_len is None:
+            prefix_len = src_len
+        if not 0 <= prefix_len <= src_len:
+            raise ValueError(
+                f"fork prefix_len={prefix_len} outside [0, {src_len}] "
+                f"(seq {src} has {src_len} rows)"
+            )
+        shared = self._seq_pages[src][: self.pages_needed(prefix_len)]
+        for pid in shared:
+            self._ref[pid] += 1
+        self._seq_pages[dst] = list(shared)
+        self._seq_len[dst] = prefix_len
 
     def seq_len(self, rid: int) -> int:
         return self._seq_len[rid]
@@ -117,6 +209,14 @@ class PagedKVCache:
 
     def live_sequences(self) -> list[int]:
         return list(self._seq_pages)
+
+    def page_refcount(self, pid: int) -> int:
+        """Owners of physical page ``pid`` (0 = on the free list)."""
+        return int(self._ref[pid])
+
+    def num_aliased_pages(self) -> int:
+        """Physical pages currently shared by more than one request."""
+        return int(np.sum(self._ref > 1))
 
     # ------------------------------------------------------------------ #
     # data path
@@ -142,8 +242,19 @@ class PagedKVCache:
         while off < n:
             pos = used + off
             if pos // self.page_size == len(page_list):
-                page_list.append(self._free.popleft())
+                page_list.append(self._grab_page())
             pid = page_list[pos // self.page_size]
+            if self._ref[pid] > 1:
+                # Copy-on-write: this tail page is aliased by a forked
+                # sibling/parent — give this request a private copy before
+                # the write.  Only ever the (partial) boundary page.
+                new_pid = self._grab_page()
+                self.pages = _copy_page(
+                    self.pages, jnp.int32(new_pid), jnp.int32(pid)
+                )
+                self._ref[pid] -= 1
+                page_list[pos // self.page_size] = new_pid
+                pid = new_pid
             in_page = pos % self.page_size
             m = min(self.page_size - in_page, n - off)
             # jit'd + donated: a 1-row decode append is an in-place slice

@@ -170,6 +170,8 @@ class PagedDecodeSession:
         scheduler: str = "queue",
         num_splits: int = 1,
         block_k: int | None = None,
+        prefix_sharing: bool = False,
+        min_group: int = 2,
     ):
         from repro.kernels import ops
         from repro.kernels.decode_schedule import DecodeScheduler
@@ -189,15 +191,18 @@ class PagedDecodeSession:
         # per step); sized for the worst case of one request owning the pool.
         self.table_width = num_pages
         self.scheduler = scheduler
+        self.prefix_sharing = prefix_sharing and scheduler == "queue"
         self.block_k = block_k or ops.default_paged_block_k(
             self.kv.page_size, self.table_width
         )
         # One memoizing scheduler for the whole session: a schedule stays
         # valid while every live request's KV-block count is unchanged, so
         # consecutive decode steps (each +1 token) reuse it ~block_k times
-        # before a rebuild.
+        # before a rebuild.  The live-rid tuple rides along as the identity
+        # key, so admit/evict churn (a recycled slot with a coincidentally
+        # identical block count) can never serve a stale schedule.
         self._scheduler = DecodeScheduler(
-            block_k=self.block_k, num_splits=num_splits
+            block_k=self.block_k, num_splits=num_splits, min_group=min_group
         )
         self.active: list[int] = []
         self._next_id = 0
@@ -227,11 +232,53 @@ class PagedDecodeSession:
         return rid
 
     def evict(self, rid: int) -> None:
-        """Finish/cancel ``rid``: its pages return to the pool immediately."""
+        """Finish/cancel ``rid``: its pages return to the pool immediately
+        (pages aliased by forked siblings stay until their last owner goes).
+        """
         if rid not in self.active:
             raise KeyError(f"request {rid} is not live")
         self.active.remove(rid)
         self.kv.free(rid)
+
+    def fork(self, rid: int, prefix_len: int | None = None) -> int:
+        """Branch a live request: the child shares ``rid``'s first
+        ``prefix_len`` rows (default: all of them) by page aliasing.
+
+        Zero pages, zero row copies — refcounts go up, and the shared
+        boundary page is copied lazily on the first append that writes into
+        it (``PagedKVCache`` copy-on-write).  With ``prefix_sharing`` on,
+        the scheduler groups the family's shared blocks so their attention
+        is computed once per step for the whole group.
+        """
+        if rid not in self.active:
+            raise KeyError(f"request {rid} is not live")
+        child = self._next_id
+        self._next_id += 1
+        self.kv.fork(rid, child, prefix_len)
+        self.active.append(child)
+        return child
+
+    def admit_with_prefix(
+        self, parent_rid: int, latent_suffix, prefix_len: int | None = None
+    ) -> int | None:
+        """Admit a request as ``fork(parent) + append(suffix)`` — the
+        continuous-batching entry for shared-system-prompt / n-best traffic.
+
+        ``latent_suffix`` is the new request's own ``(S, d_k)`` rows (its
+        divergent turn); may be empty.  Returns the request id, or None when
+        the pool lacks pages for the suffix (+ the boundary COW page), in
+        which case nothing is left allocated — callers queue and retry,
+        exactly like :meth:`admit`.
+        """
+        latent_suffix = jnp.asarray(latent_suffix)
+        n = int(latent_suffix.shape[0]) if latent_suffix.ndim else 0
+        child = self.fork(parent_rid, prefix_len)
+        if n:
+            if not self.kv.has_room(child, n):
+                self.evict(child)
+                return None
+            self.kv.append(child, latent_suffix)
+        return child
 
     def attend(self, queries: dict[int, jax.Array]) -> dict[int, jax.Array]:
         """Batched paged attention for ``{rid: (G, d_k)}`` absorbed queries.
@@ -255,8 +302,20 @@ class PagedDecodeSession:
         if self.scheduler == "queue":
             # kv_len is host-side numpy here, so scheduling costs no device
             # sync; the memoized schedule is reused until a request crosses
-            # a block_k boundary or the active set changes.
-            schedule = self._scheduler.schedule(kv_len)
+            # a block_k boundary or the active set changes (the rid tuple is
+            # the identity key — a recycled slot forces a rebuild even at an
+            # identical block signature).
+            if self.prefix_sharing:
+                schedule = self._scheduler.schedule_prefix(
+                    kv_len,
+                    bt,
+                    page_size=self.kv.page_size,
+                    extra_key=tuple(rids),
+                )
+            else:
+                schedule = self._scheduler.schedule(
+                    kv_len, extra_key=tuple(rids)
+                )
         out = ops.mla_decode_paged(
             q,
             self.kv.pages,

@@ -15,8 +15,11 @@ from hypothesis import strategies as st
 
 from repro.kernels.decode_schedule import (
     DecodeScheduler,
+    build_prefix_schedule,
     build_schedule,
+    find_prefix_groups,
     padded_grid_items,
+    prefix_queue_grid_items,
     queue_grid_items,
 )
 
@@ -145,6 +148,180 @@ def test_scheduler_reuses_until_block_boundary():
     c = s.schedule([129, 201])
     assert c is not a and s.rebuilds == 2
     _check_schedule_invariants(c, [129, 201])
+
+
+def test_suffix_schedule_skips_start_blocks():
+    sched = build_schedule(
+        [5 * 128, 2 * 128, 100], block_k=128, start_blocks=[2, 2, 0]
+    )
+    real = slice(0, sched.num_items)
+    pairs = set(zip(sched.item_req[real].tolist(), sched.item_block[real].tolist()))
+    # request 0: blocks 2..4; request 1: nothing left; request 2: block 0
+    assert pairs == {(0, 2), (0, 3), (0, 4), (2, 0)}
+    assert sched.n_splits.tolist() == [1, 0, 1]
+    # first/last flags still bracket the (shorter) runs exactly
+    fst = sched.item_first[real]
+    lst = sched.item_last[real]
+    for d in np.unique(sched.item_dest[real]):
+        idx = np.flatnonzero(sched.item_dest[real] == d)
+        assert fst[idx[0]] == 1 and lst[idx[-1]] == 1
+
+
+# --------------------------------------------------------------------------- #
+# shared-prefix grouping
+# --------------------------------------------------------------------------- #
+
+
+def _family_tables(shared_pages, suffix_pages_per_req, width=None):
+    """Block tables for a fork family: common leading pages + private tails."""
+    rows = []
+    for suffix in suffix_pages_per_req:
+        rows.append(list(shared_pages) + list(suffix))
+    w = width or max(len(r) for r in rows)
+    bt = np.zeros((len(rows), w), np.int32)
+    for i, r in enumerate(rows):
+        bt[i, : len(r)] = r
+    return bt
+
+
+def test_find_prefix_groups_requires_aliased_complete_blocks():
+    page, block_k = 4, 8  # 2 pages per block
+    # requests 0,1,2 share pages [10,11,12,13] = 2 complete blocks; 3 is solo
+    bt = _family_tables([10, 11, 12, 13], [[20], [21], [22], []], width=6)
+    bt[3] = [30, 31, 32, 33, 0, 0]
+    kv = [4 * page + 3, 4 * page + 2, 4 * page + 1, 4 * page]
+    g = find_prefix_groups(bt, kv, page_size=page, block_k=block_k)
+    assert g.num_groups == 1 and g.gmax == 3
+    assert g.shared_blocks.tolist() == [2]
+    assert g.group_member[0].tolist() == [0, 1, 2]
+    assert g.group_of_req.tolist() == [0, 0, 0, -1]
+    assert g.slot_of_req.tolist() == [0, 1, 2, -1]
+
+    # same pages but a member too short for ONE complete block: ungrouped
+    kv_short = [4 * page + 3, block_k - 1, 4 * page + 1, 4 * page]
+    g = find_prefix_groups(bt, kv_short, page_size=page, block_k=block_k)
+    assert g.group_of_req.tolist() == [0, -1, 0, -1]
+
+    # divergence mid-run truncates the shared run to the common min
+    bt2 = bt.copy()
+    bt2[2, 2] = 40  # request 2's second block differs
+    g = find_prefix_groups(bt2, kv, page_size=page, block_k=block_k)
+    assert g.num_groups == 1
+    assert g.shared_blocks.tolist() == [1]
+
+
+def test_equal_content_without_aliasing_never_groups():
+    # distinct page ids (no fork) => no sharing even if lengths match
+    bt = np.asarray([[1, 2], [3, 4]], np.int32)
+    g = find_prefix_groups(bt, [8, 8], page_size=4, block_k=8)
+    assert g.num_groups == 0 and g.gmax == 0
+    assert np.all(g.group_of_req == -1)
+
+
+def test_prefix_schedule_partitions_work_exactly():
+    page, block_k = 4, 8
+    bt = _family_tables([10, 11, 12, 13], [[20], [21, 22]], width=8)
+    kv = [4 * page + 2, 4 * page + 7]
+    ps = build_prefix_schedule(kv, bt, page_size=page, block_k=block_k)
+    assert ps.num_groups == 1
+    assert ps.start_blocks.tolist() == [2, 2]
+    # prefix pass: one virtual request with 2 block items
+    real = slice(0, ps.prefix.num_items)
+    assert list(
+        zip(ps.prefix.item_req[real].tolist(), ps.prefix.item_block[real].tolist())
+    ) == [(0, 0), (0, 1)]
+    # suffix pass: blocks >= 2 per member
+    real = slice(0, ps.suffix.num_items)
+    pairs = set(
+        zip(ps.suffix.item_req[real].tolist(), ps.suffix.item_block[real].tolist())
+    )
+    assert pairs == {(0, 2), (1, 2)}
+    # accounting: shared pages DMA'd once for the group, G x without sharing
+    acc = prefix_queue_grid_items(ps, kv, page)
+    assert acc["prefix_page_dmas"] == 4
+    assert acc["unshared_prefix_page_dmas"] == 8
+    assert acc["page_dmas"] == 4 + (5 - 4) + (6 - 4)
+    assert acc["live_pages"] == 5 + 6
+
+
+def test_hetero_dest_tables_cover_prefix_and_suffix():
+    page, block_k = 4, 8
+    bt = _family_tables([10, 11], [[20], [21]], width=4)
+    kv = [2 * page + 2, 2 * page + 5]
+    ps = build_prefix_schedule(
+        kv, bt, page_size=page, block_k=block_k, num_splits=2
+    )
+    dest, n_live = ps.hetero_dest_tables()
+    d_suf = ps.suffix.num_dest_slots
+    gmax = ps.groups.gmax
+    assert n_live.tolist() == [2, 2]  # one suffix split + one prefix partial
+    assert dest.shape == (2, 3)
+    assert dest[0, 1] == d_suf + 0 * gmax + 0
+    assert dest[1, 1] == d_suf + 0 * gmax + 1
+    # padding column repeats a live slot (warm gated-off fetch)
+    assert dest[0, 2] == dest[0, 1]
+
+
+def test_no_aliasing_degenerates_to_plain_schedule():
+    bt = np.asarray([[1, 2], [3, 4]], np.int32)
+    kv = [8, 7]
+    ps = build_prefix_schedule(kv, bt, page_size=4, block_k=8)
+    assert ps.num_groups == 0 and ps.prefix is None
+    plain = build_schedule(kv, block_k=8)
+    assert np.array_equal(ps.suffix.item_req, plain.item_req)
+    assert np.array_equal(ps.suffix.item_block, plain.item_block)
+    acc = prefix_queue_grid_items(ps, kv, 4)
+    assert acc["page_dmas"] == acc["live_pages"] == 4
+
+
+# --------------------------------------------------------------------------- #
+# memoization invalidation on admit/evict churn
+# --------------------------------------------------------------------------- #
+
+
+def test_scheduler_rebuilds_when_slot_recycled_same_signature():
+    """Evicting a request and admitting another with the SAME block count
+    must rebuild: the batch identity (extra_key) changed even though the
+    block signature did not."""
+    s = DecodeScheduler(block_k=128, num_splits=1)
+    a = s.schedule([100, 200], extra_key=(7, 8))
+    b = s.schedule([101, 201], extra_key=(7, 8))  # same rids: reuse
+    assert b is a and s.hits == 1
+    c = s.schedule([101, 150], extra_key=(7, 9))  # slot recycled: rebuild
+    assert c is not a and s.rebuilds == 2
+    # and back-to-back with the new identity: reuse again
+    d = s.schedule([102, 151], extra_key=(7, 9))
+    assert d is c and s.hits == 2
+
+
+def test_prefix_scheduler_rebuilds_on_page_signature_change():
+    """COW/realias churn changes page ids at an identical block signature —
+    the prefix schedule must see it (grouping is by page identity)."""
+    page, block_k = 4, 8
+    s = DecodeScheduler(block_k=block_k, num_splits=1)
+    bt = _family_tables([10, 11], [[20], [21]], width=4)
+    kv = [2 * page + 1, 2 * page + 1]
+    a = s.schedule_prefix(kv, bt, page_size=page, extra_key=(0, 1))
+    b = s.schedule_prefix([kv[0] + 1, kv[1]], bt, page_size=page, extra_key=(0, 1))
+    assert b is a and s.hits == 1  # same blocks, same pages: reuse
+    bt2 = bt.copy()
+    bt2[1, :2] = [30, 31]  # request 1's prefix re-materialized (no aliasing)
+    c = s.schedule_prefix(kv, bt2, page_size=page, extra_key=(0, 1))
+    assert c is not a and c.num_groups == 0
+    # admit/evict churn at identical geometry: extra_key forces rebuild
+    d = s.schedule_prefix(kv, bt2, page_size=page, extra_key=(0, 2))
+    assert d is not c
+
+
+def test_scheduler_mixed_plain_and_prefix_calls_never_cross_serve():
+    page, block_k = 4, 8
+    s = DecodeScheduler(block_k=block_k)
+    bt = _family_tables([10, 11], [[20], [21]], width=4)
+    kv = [2 * page + 1, 2 * page + 1]
+    a = s.schedule(kv)
+    b = s.schedule_prefix(kv, bt, page_size=page)
+    assert b is not a  # a PrefixSchedule, not the cached plain schedule
+    assert hasattr(b, "suffix")
 
 
 def test_work_accounting_matches_acceptance_geometry():

@@ -62,6 +62,12 @@ def test_example_serve_paged_decode():
     assert "paged vs contiguous" in out and "OK" in out
 
 
+def test_example_serve_shared_prefix():
+    out = run_script(["examples/serve_shared_prefix.py"])
+    assert "x dedup" in out and "shared-prefix vs contiguous" in out
+    assert "OK" in out
+
+
 @pytest.mark.slow
 def test_example_long_context_decode():
     out = run_script(["examples/long_context_decode.py"])

@@ -110,3 +110,133 @@ def test_bad_row_width_rejected():
     kv.alloc(0)
     with pytest.raises(ValueError):
         kv.append(0, rows(4, width=8))
+
+
+# --------------------------------------------------------------------------- #
+# refcounted fork / copy-on-write (shared-prefix decode)
+# --------------------------------------------------------------------------- #
+
+
+def test_free_is_idempotent_and_strict_in_debug():
+    from repro.runtime.kv_cache import DoubleFreeError
+
+    kv = make_cache(num_pages=4, page_size=4)
+    kv.alloc(0)
+    kv.append(0, rows(8))
+    kv.free(0)
+    assert kv.num_free_pages == 4
+    # Double-free must NOT re-enqueue pages (that would hand live pages of a
+    # later owner out twice); production mode is an idempotent no-op.
+    kv.free(0)
+    assert kv.num_free_pages == 4
+    kv.free(123)  # never-allocated id: same story
+    assert kv.num_free_pages == 4
+
+    strict = PagedKVCache(num_pages=4, page_size=4, width=16, debug=True)
+    strict.alloc(0)
+    strict.free(0)
+    with pytest.raises(DoubleFreeError):
+        strict.free(0)
+
+
+def test_fork_aliases_pages_without_allocating():
+    kv = make_cache(num_pages=8, page_size=4)
+    kv.alloc(0)
+    data = rows(10, seed=3)
+    kv.append(0, data)
+    free_before = kv.num_free_pages
+    kv.fork(0, 1, 10)
+    assert kv.num_free_pages == free_before  # zero pages consumed
+    assert kv.seq_pages(1) == kv.seq_pages(0)
+    assert kv.seq_len(1) == 10
+    assert all(kv.page_refcount(p) == 2 for p in kv.seq_pages(0))
+    assert kv.num_aliased_pages() == 3
+    np.testing.assert_allclose(np.asarray(kv.gather_contiguous(1)), data)
+
+
+def test_fork_partial_prefix_masks_boundary_tail():
+    kv = make_cache(num_pages=8, page_size=4)
+    kv.alloc(0)
+    data = rows(10, seed=4)
+    kv.append(0, data)
+    kv.fork(0, 1, prefix_len=6)  # boundary page shared, rows 6..7 dead
+    assert kv.seq_len(1) == 6
+    assert len(kv.seq_pages(1)) == 2
+    np.testing.assert_allclose(np.asarray(kv.gather_contiguous(1)), data[:6])
+
+
+def test_cow_on_child_append_preserves_parent():
+    kv = make_cache(num_pages=8, page_size=4)
+    kv.alloc(0)
+    data = rows(10, seed=5)  # 2.5 pages: boundary page 2 is partial
+    kv.append(0, data)
+    kv.fork(0, 1, 10)
+    child_rows = rows(3, seed=6)
+    kv.append(1, child_rows)  # writes into shared boundary page -> COW
+    assert kv.seq_pages(1)[:2] == kv.seq_pages(0)[:2]  # full pages stay shared
+    assert kv.seq_pages(1)[2] != kv.seq_pages(0)[2]  # boundary was copied
+    assert kv.page_refcount(kv.seq_pages(0)[2]) == 1
+    np.testing.assert_allclose(
+        np.asarray(kv.gather_contiguous(1)),
+        np.concatenate([data, child_rows]),
+    )
+    np.testing.assert_allclose(np.asarray(kv.gather_contiguous(0)), data)
+
+
+def test_cow_on_parent_append_preserves_child():
+    kv = make_cache(num_pages=8, page_size=4)
+    kv.alloc(0)
+    data = rows(6, seed=7)
+    kv.append(0, data)
+    kv.fork(0, 1, 6)
+    parent_rows = rows(2, seed=8)
+    kv.append(0, parent_rows)  # the PARENT faults the COW symmetrically
+    assert kv.seq_pages(0)[1] != kv.seq_pages(1)[1]
+    np.testing.assert_allclose(
+        np.asarray(kv.gather_contiguous(0)),
+        np.concatenate([data, parent_rows]),
+    )
+    np.testing.assert_allclose(np.asarray(kv.gather_contiguous(1)), data)
+
+
+def test_cow_accounted_in_room_checks():
+    kv = make_cache(num_pages=2, page_size=4)
+    kv.alloc(0)
+    kv.append(0, rows(3, seed=9))
+    kv.fork(0, 1, 3)
+    assert kv.pages_needed_for_append(1, 1) == 1  # COW page, no growth page
+    assert kv.has_room(1, 1)
+    assert kv.pages_needed_for_append(1, 6) == 3  # COW + two growth pages
+    with pytest.raises(OutOfPagesError):
+        kv.append(1, rows(10, seed=10))
+    assert kv.seq_len(1) == 3  # atomically unchanged
+
+
+def test_free_of_fork_family_releases_pages_last_owner_wins():
+    kv = make_cache(num_pages=6, page_size=4)
+    kv.alloc(0)
+    kv.append(0, rows(8, seed=11))  # 2 full pages
+    kv.fork(0, 1)
+    kv.fork(0, 2)
+    assert kv.num_free_pages == 4
+    kv.free(0)
+    kv.free(1)
+    # pages still owned by request 2 — nothing recycled yet
+    assert kv.num_free_pages == 4
+    data2 = np.asarray(kv.gather_contiguous(2))
+    np.testing.assert_allclose(data2, rows(8, seed=11))
+    kv.free(2)
+    assert kv.num_free_pages == 6
+
+
+def test_fork_validates_arguments():
+    kv = make_cache()
+    kv.alloc(0)
+    kv.append(0, rows(5, seed=12))
+    with pytest.raises(ValueError):
+        kv.fork(0, 1, prefix_len=6)  # beyond the parent
+    with pytest.raises(KeyError):
+        kv.fork(99, 1)  # unknown parent
+    kv.fork(0, 1, 5)
+    with pytest.raises(KeyError):
+        kv.fork(0, 1)  # child id already live
