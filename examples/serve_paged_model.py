@@ -1,0 +1,78 @@
+"""Full-model paged serving demo: the whole LM decoding from pages.
+
+    PYTHONPATH=src python examples/serve_paged_model.py
+
+Where examples/serve_paged_decode.py drives the paged *kernel* with
+synthetic latents, this demo serves an actual transformer (deepseek-v2-mla
+smoke geometry) through runtime.serve_loop.PagedServingSession: ragged
+prompts chunk-prefill into a LayeredPagedKVCache (one block table shared by
+all layers), every decode step builds ONE work-queue schedule reused by all
+L attention layers, a request is forked into a shared-prefix family
+(zero-copy page aliasing + COW), and the greedy tokens are checked exactly
+against the dense ServingSession backend.
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model_zoo import build_model
+from repro.runtime.serve_loop import PagedServingSession, ServingSession
+
+
+def main() -> None:
+    cfg = get_config("deepseek-v2-mla", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(2, cfg.vocab_size, size=n).tolist() for n in (6, 19, 11)
+    ]
+    suffix = rng.integers(2, cfg.vocab_size, size=5).tolist()
+
+    paged = PagedServingSession(
+        model, params, num_pages=48, page_size=16, block_k=32,
+        prefill_chunk=16, prefix_sharing=True,
+    )
+    dense = ServingSession(model, params, batch_size=4, max_len=128)
+
+    prids = [paged.add_request(p) for p in prompts]
+    drids = [dense.add_request(p) for p in prompts]
+    print(f"admitted {len(prids)} ragged prompts "
+          f"({[len(p) for p in prompts]} tokens) into "
+          f"{paged.cache.num_pages - paged.cache.num_free_pages} pages "
+          f"across {cfg.n_layers} layers")
+
+    # branch request 1 with a divergent suffix: prefix pages are aliased
+    # (no rows copied in any layer), only the suffix runs through the model
+    child = paged.admit_with_prefix(prids[1], suffix, prefix_len=len(prompts[1]))
+    dchild = dense.add_request(prompts[1] + suffix)
+    print(f"forked r{prids[1]} -> r{child}: "
+          f"{paged.cache.num_aliased_pages()} pages aliased, zero copies")
+
+    for _ in range(8):
+        paged.step()
+        dense.step()
+
+    for pr, dr in zip(prids + [child], drids + [dchild]):
+        got, want = paged.outputs[pr], dense.outputs[dr]
+        tag = "fork " if pr == child else ""
+        assert got == want, (pr, got, want)
+        print(f"{tag}r{pr}: {len(got)} tokens {got[:6]}... == dense")
+
+    stats = paged.scheduler_stats
+    work = paged.work_stats()
+    assert stats["hits"] + stats["rebuilds"] == work["decode_steps"]
+    print(f"decode schedules: {stats['rebuilds']} built, {stats['hits']} "
+          f"reused over {work['decode_steps']} steps x {cfg.n_layers} layers "
+          f"(one per step, never per layer)")
+    print(f"prefill compiles: {paged.prefill_compiles} (fixed-chunk) vs "
+          f"dense {dense.prefill_compiles} (pow2 buckets)")
+    print(f"page DMAs: {work['page_dmas']} for {work['rows_attended']} "
+          f"rows attended; paged greedy outputs match dense exactly")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

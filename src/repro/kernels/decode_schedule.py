@@ -445,6 +445,11 @@ class DecodeScheduler:
         self.hits = 0
         self.rebuilds = 0
 
+    @property
+    def current(self) -> DecodeSchedule | PrefixSchedule | None:
+        """The most recently served schedule (for work accounting)."""
+        return self._cached
+
     def _lookup(self, key, build):
         if key == self._key and self._cached is not None:
             self.hits += 1

@@ -133,6 +133,7 @@ def mla_decode_paged(
     schedule=None,
     prefix_sharing: bool = False,
     min_group: int = 2,
+    compute_dtype=None,
 ) -> jax.Array:
     """MLA decode over a paged latent cache (see runtime.kv_cache).
 
@@ -164,8 +165,13 @@ def mla_decode_paged(
     ``decode_schedule.PrefixSchedule`` via ``schedule`` to reuse grouping
     across steps; with no aliasing in the batch the path degenerates to the
     plain queue (at the cost of one extra gated combine column).
+
+    ``compute_dtype`` is the kernel matmul/staging dtype; default bf16 (the
+    serving precision).  The full-model parity harness passes float32 so a
+    paged fp32 smoke model is bit-comparable with the dense fp32 path.
     """
     b, sq, hq, dk = q.shape
+    compute_dtype = jnp.bfloat16 if compute_dtype is None else compute_dtype
     _validate_paged_geometry(q, kv_pages, block_tables, kv_len, block_k)
     kv_len = jnp.asarray(kv_len).astype(jnp.int32)
     base = jnp.maximum(kv_len - sq, 0)
@@ -176,7 +182,7 @@ def mla_decode_paged(
         cap = block_tables.shape[1] * kv_pages.shape[1]
         q_pos = jnp.full((b, sq), cap, jnp.int32)  # no causal restriction
     rows_pos = jnp.repeat(q_pos, hq, axis=1)  # (B, Sq*Hq)
-    q_rows = q.reshape(b, sq * hq, dk).astype(jnp.bfloat16)
+    q_rows = q.reshape(b, sq * hq, dk).astype(compute_dtype)
 
     if scheduler == "padded":
         if prefix_sharing:
@@ -187,7 +193,7 @@ def mla_decode_paged(
             )
         out = _mla_paged.mla_decode_paged_rows(
             q_rows,
-            kv_pages.astype(jnp.bfloat16),
+            kv_pages.astype(compute_dtype),
             block_tables,
             kv_len,
             rows_pos,
@@ -217,7 +223,7 @@ def mla_decode_paged(
             f"schedule was built for block_k={schedule.block_k}, "
             f"call requested {block_k}"
         )
-    pool = kv_pages.astype(jnp.bfloat16)
+    pool = kv_pages.astype(compute_dtype)
 
     if prefix_sharing:
         ps = schedule

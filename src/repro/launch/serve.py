@@ -1,11 +1,25 @@
-"""Serving driver: batched decode with slot-reuse scheduling.
+"""Serving driver: batched decode behind a cache-backend flag.
 
-Runs a reduced config on CPU (examples use it); the same ServingSession +
+``--cache dense`` (default) runs the slot-reuse :class:`ServingSession`
+over contiguous ``(B, max_len)`` caches; ``--cache paged`` runs the same
+request stream through :class:`PagedServingSession` — the full model
+decoding over a LayeredPagedKVCache via the AMLA paged kernels, with
+chunked prefill-into-pages and one decode schedule per step shared by all
+layers.  Greedy outputs are identical across backends (the parity suite
+``tests/test_paged_model_serve.py`` pins this exactly).
+
+Runs a reduced config on CPU (examples use it); the same sessions +
 sharded serve fns drive the full configs on a real mesh.
 
 Usage:
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
-        --requests 6 --gen-len 16 --batch 4
+    PYTHONPATH=src python -m repro.launch.serve --cache paged --smoke \
+        --requests 6 --gen-len 16
+    PYTHONPATH=src python -m repro.launch.serve --cache paged --smoke \
+        --shared-prefix   # forked system-prompt demo
+
+The paged backend needs an MLA geometry; with no explicit ``--arch`` it
+serves the paper's (``deepseek-v2-mla``), while dense defaults to
+``qwen1.5-0.5b`` as before.
 """
 
 from __future__ import annotations
@@ -18,59 +32,174 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models.model_zoo import build_model
-from repro.runtime.serve_loop import ServingSession
+from repro.runtime.kv_cache import OutOfPagesError
+from repro.runtime.serve_loop import PagedServingSession, ServingSession
+
+
+def _build_session(args, cfg, model, params):
+    if args.cache == "paged":
+        return PagedServingSession(
+            model,
+            params,
+            num_pages=args.num_pages,
+            page_size=args.page_size,
+            block_k=args.block_k,
+            prefill_chunk=args.prefill_chunk,
+            prefix_sharing=args.shared_prefix,
+            max_batch=args.batch,
+        )
+    return ServingSession(model, params, batch_size=args.batch, max_len=args.max_len)
+
+
+def _serve_stream(sess, pending, gen_len, requests):
+    """Admit-as-room-allows / step / finish loop shared by both backends."""
+    live: dict[int, int] = {}  # rid -> remaining tokens
+    done = 0
+    t0 = time.time()
+    tokens_out = 0
+    results: dict[int, list[int]] = {}
+    while done < requests:
+        # admit as many queued prompts as there is room (slots or pages)
+        while pending:
+            rid = sess.add_request(pending[0])
+            if rid is None:
+                break
+            pending.pop(0)
+            live[rid] = gen_len
+            print(f"admitted request {rid} ({len(pending)} queued)")
+        if not live and pending:
+            # Nothing running and the head prompt still won't admit: with
+            # every slot/page free this can never clear (e.g. a prompt
+            # larger than the whole paged pool) — fail instead of spinning.
+            raise SystemExit(
+                f"request of {len(pending[0])} tokens cannot be admitted "
+                f"even with an idle session — increase --num-pages/"
+                f"--page-size (paged) or --batch/--max-len (dense)"
+            )
+        try:
+            sess.step()
+        except OutOfPagesError:
+            # Paged pool exhausted by decode-time growth: retire the
+            # most-complete live request early (its output is kept) to free
+            # pages, then retry the step — continuous batching's backstop.
+            victim = max(live, key=lambda r: len(sess.outputs[r]))
+            out = sess.finish(victim)
+            results[victim] = out
+            done += 1
+            del live[victim]
+            print(
+                f"pool full: retired request {victim} early with "
+                f"{len(out)} tokens: {out[:8]}..."
+            )
+            continue
+        tokens_out += sum(1 for _ in live)
+        for rid in list(live):
+            live[rid] -= 1
+            if live[rid] <= 0:
+                out = sess.finish(rid)
+                results[rid] = out
+                done += 1
+                print(f"request {rid} done: {len(out)} tokens: {out[:8]}...")
+                del live[rid]
+    dt = time.time() - t0
+    return results, tokens_out, dt
+
+
+def _shared_prefix_demo(sess, cfg, seed, gen_len):
+    """Forked system-prompt traffic: one parent, aliased children."""
+    rng = np.random.default_rng(seed)
+    system = rng.integers(2, cfg.vocab_size, size=48).tolist()
+    parent = sess.add_request(system)
+    if parent is None:
+        raise SystemExit(
+            "shared-prefix demo: the system prompt does not fit — raise "
+            "--num-pages/--batch"
+        )
+    kids = []
+    for _ in range(2):
+        suffix = rng.integers(2, cfg.vocab_size, size=int(rng.integers(4, 10)))
+        kid = sess.admit_with_prefix(parent, suffix.tolist())
+        if kid is None:
+            raise SystemExit(
+                "shared-prefix demo: could not admit a forked child — raise "
+                "--num-pages/--batch (needs the parent plus two children live)"
+            )
+        kids.append(kid)
+    print(
+        f"shared-prefix demo: parent {parent} + children {kids}; "
+        f"{sess.cache.num_aliased_pages()} pages aliased across "
+        f"{cfg.n_layers} layers (zero rows copied)"
+    )
+    for _ in range(gen_len):
+        sess.step()
+    for rid in [parent] + kids:
+        out = sess.finish(rid)
+        print(f"request {rid} done: {len(out)} tokens: {out[:8]}...")
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--arch", default=None,
+                    help="default: qwen1.5-0.5b (dense) / deepseek-v2-mla (paged)")
+    ap.add_argument("--cache", choices=("dense", "paged"), default="dense",
+                    help="cache backend: contiguous per-slot caches, or the "
+                    "layered paged latent pool")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--num-pages", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=32)
+    ap.add_argument("--block-k", type=int, default=None)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="paged only: serve a forked system-prompt family "
+                    "with group-batched prefix attention")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, smoke=args.smoke)
+    arch = args.arch or (
+        "deepseek-v2-mla" if args.cache == "paged" else "qwen1.5-0.5b"
+    )
+    cfg = get_config(arch, smoke=args.smoke)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    sess = ServingSession(
-        model, params, batch_size=args.batch, max_len=args.max_len
-    )
+    sess = _build_session(args, cfg, model, params)
+    print(f"serving {arch} with the {args.cache} cache backend")
+
+    if args.shared_prefix:
+        if args.cache != "paged":
+            raise SystemExit("--shared-prefix needs --cache paged")
+        _shared_prefix_demo(sess, cfg, args.seed, args.gen_len)
+        stats = sess.scheduler_stats
+        print(
+            f"scheduler: {stats['rebuilds']} rebuilds, {stats['hits']} "
+            f"reuse hits; prefill compiles: {sess.prefill_compiles}"
+        )
+        return
 
     rng = np.random.default_rng(args.seed)
     pending = [
         rng.integers(2, cfg.vocab_size, size=int(rng.integers(4, 24))).tolist()
         for _ in range(args.requests)
     ]
-    live: dict[int, int] = {}  # rid -> remaining tokens
-    done = 0
-    t0 = time.time()
-    tokens_out = 0
-    while done < args.requests:
-        # admit as many queued prompts as there are free slots
-        while pending:
-            rid = sess.add_request(pending[0])
-            if rid is None:
-                break
-            pending.pop(0)
-            live[rid] = args.gen_len
-            print(f"admitted request {rid} ({len(pending)} queued)")
-        sess.step()
-        tokens_out += sum(1 for _ in live)
-        for rid in list(live):
-            live[rid] -= 1
-            if live[rid] <= 0:
-                out = sess.finish(rid)
-                done += 1
-                print(f"request {rid} done: {len(out)} tokens: {out[:8]}...")
-                del live[rid]
-    dt = time.time() - t0
+    _, tokens_out, dt = _serve_stream(sess, pending, args.gen_len, args.requests)
     print(
         f"served {args.requests} requests, {tokens_out} decode tokens "
         f"in {dt:.1f}s ({tokens_out / max(dt, 1e-9):.1f} tok/s)"
     )
+    # Compile accounting: bucketed prefill keeps this O(log max_len) for a
+    # ragged prompt stream (dense), and exactly one chunk shape (paged).
+    print(f"prefill compiles: {sess.prefill_compiles}")
+    if args.cache == "paged":
+        stats = sess.scheduler_stats
+        work = sess.work_stats()
+        print(
+            f"decode schedules: {stats['rebuilds']} built, {stats['hits']} "
+            f"step reuses across {work['decode_steps']} steps x "
+            f"{cfg.n_layers} layers; {work['page_dmas']} page DMAs"
+        )
 
 
 if __name__ == "__main__":

@@ -92,6 +92,64 @@ def init_latent_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
     return {"c": jnp.zeros((batch, max_len, m.d_latent + m.d_rope), dtype)}
 
 
+def mla_scale(cfg) -> float:
+    """Attention scale: pre-absorption per-head width (d_nope + d_rope)."""
+    return 1.0 / math.sqrt(cfg.mla.d_nope + cfg.mla.d_rope)
+
+
+# --------------------------------------------------------------------------- #
+# Absorbed-form decode pieces.  The decode path factors into three reusable
+# stages so cache backends can interleave their own storage between them:
+# ``mla_latents`` produces the 576-wide rows a latent cache stores (dense
+# slabs or pages alike), ``mla_absorbed_queries`` the Q' rows scored against
+# that cache (``ops.mla_decode_paged`` or ``core.attention.mla_attention``),
+# and ``mla_unabsorb_output`` projects attention output back to d_model.
+# ``mla_apply`` below composes exactly these for the dense path.
+# --------------------------------------------------------------------------- #
+
+
+def mla_latents(params, x, *, cfg, positions, dtype=jnp.bfloat16):
+    """Latent cache rows ``[c ; RoPE(k_rope)]`` — (B, S, d_latent + d_rope).
+
+    This is the only tensor a latent-KV backend stores per token (shared by
+    all heads); its width is 576 at DeepSeek-V2 geometry.
+    """
+    c = layers.dense(params["wkv_down"], x, dtype=dtype)  # (B, S, d_latent)
+    k_rope = layers.dense(params["wk_rope"], x, dtype=dtype)  # (B, S, d_rope)
+    k_rope = layers.rope(
+        k_rope[:, :, None, :], positions, theta=cfg.rope_theta
+    )[:, :, 0]
+    return jnp.concatenate([c, k_rope], axis=-1)
+
+
+def mla_absorbed_queries(params, x, *, cfg, positions, dtype=jnp.bfloat16):
+    """Absorbed queries ``q' = [q_nope W_uk ; RoPE(q_rope)]`` — (B, S, H,
+    d_latent + d_rope), scored directly against the latent rows (§2.2)."""
+    xd = x.astype(dtype)
+    q_nope = jnp.einsum("bsd,dhn->bshn", xd, params["wq_nope"].astype(dtype))
+    q_rope = jnp.einsum("bsd,dhr->bshr", xd, params["wq_rope"].astype(dtype))
+    q_rope = layers.rope(q_rope, positions, theta=cfg.rope_theta)
+    q_c = jnp.einsum(
+        "bshn,hnc->bshc", q_nope, params["w_uk"].astype(dtype),
+        preferred_element_type=jnp.float32,
+    ).astype(dtype)
+    return jnp.concatenate([q_c, q_rope], axis=-1)
+
+
+def mla_unabsorb_output(params, attn, *, cfg, dtype=jnp.bfloat16):
+    """Un-absorb values (per-head latent -> d_vhead) and merge heads.
+
+    ``attn`` is (B, S, H, d_latent) attention output over latent values.
+    """
+    m = cfg.mla
+    b, s, h = attn.shape[:3]
+    o = jnp.einsum(
+        "bshc,hcv->bshv", attn.astype(dtype), params["w_uv"].astype(dtype),
+        preferred_element_type=jnp.float32,
+    ).astype(dtype)
+    return layers.dense(params["wo"], o.reshape(b, s, h * m.d_vhead), dtype=dtype)
+
+
 def mla_apply(
     params,
     x: jax.Array,  # (B, S, d)
@@ -119,27 +177,14 @@ def mla_apply(
         )
 
     # Latent KV: c = x W_down ; k_rope = RoPE(x W_kr)  (shared across heads).
-    c = layers.dense(params["wkv_down"], x, dtype=dtype)  # (B, S, d_latent)
-    k_rope = layers.dense(params["wk_rope"], x, dtype=dtype)  # (B, S, d_rope)
-    k_rope = layers.rope(
-        k_rope[:, :, None, :], positions, theta=cfg.rope_theta
-    )[:, :, 0]
-    c_full = jnp.concatenate([c, k_rope], axis=-1)  # (B, S, 576)
+    c_full = mla_latents(
+        params, x, cfg=cfg, positions=positions, dtype=dtype
+    )  # (B, S, 576)
 
     # Absorbed queries: q' = [q_nope W_uk ; RoPE(q_rope)]  (B, S, H, 576).
-    xd = x.astype(dtype)
-    q_nope = jnp.einsum(
-        "bsd,dhn->bshn", xd, params["wq_nope"].astype(dtype)
+    q_full = mla_absorbed_queries(
+        params, x, cfg=cfg, positions=positions, dtype=dtype
     )
-    q_rope = jnp.einsum(
-        "bsd,dhr->bshr", xd, params["wq_rope"].astype(dtype)
-    )
-    q_rope = layers.rope(q_rope, positions, theta=cfg.rope_theta)
-    q_c = jnp.einsum(
-        "bshn,hnc->bshc", q_nope, params["w_uk"].astype(dtype),
-        preferred_element_type=jnp.float32,
-    ).astype(dtype)
-    q_full = jnp.concatenate([q_c, q_rope], axis=-1)
 
     if cache is not None:
         assert cache_len is not None
@@ -167,7 +212,7 @@ def mla_apply(
         q_offset = jnp.zeros((b,), jnp.int32)
 
     # Scale uses the pre-absorption per-head width (d_nope + d_rope).
-    scale = 1.0 / math.sqrt(m.d_nope + m.d_rope)
+    scale = mla_scale(cfg)
     attn = mla_attention(
         q_full,
         c_all,
@@ -181,9 +226,5 @@ def mla_apply(
     )  # (B, S, H, d_latent)
 
     # Un-absorb values: per-head projection latent -> d_vhead, then merge.
-    o = jnp.einsum(
-        "bshc,hcv->bshv", attn.astype(dtype), params["w_uv"].astype(dtype),
-        preferred_element_type=jnp.float32,
-    ).astype(dtype)
-    y = layers.dense(params["wo"], o.reshape(b, s, h * m.d_vhead), dtype=dtype)
+    y = mla_unabsorb_output(params, attn, cfg=cfg, dtype=dtype)
     return y, cache

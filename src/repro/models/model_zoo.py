@@ -87,7 +87,10 @@ class LanguageModel:
         del params
         return lm_cache_init(self.cfg, batch_size, max_len, dtype or self.dtype)
 
-    def prefill(self, params, cache, tokens, *, cache_len=None):
+    def prefill(self, params, cache, tokens, *, cache_len=None, last_pos=None):
+        """``last_pos`` (scalar, may be traced): position whose logits to
+        return — lets callers right-pad prompts into a few bucketed shapes
+        (fewer compiles) while still sampling from the true last token."""
         b = tokens.shape[0]
         if cache_len is None:
             cache_len = jnp.zeros((b,), jnp.int32)
@@ -96,7 +99,11 @@ class LanguageModel:
             positions=self._positions({}, tokens, cache_len=cache_len),
             cache=cache, cache_len=cache_len, dtype=self.dtype,
         )
-        logits = lm_logits(params, hidden[:, -1:], cfg=self.cfg, dtype=self.dtype)
+        if last_pos is None:
+            sel = hidden[:, -1:]
+        else:
+            sel = jax.lax.dynamic_slice_in_dim(hidden, last_pos, 1, axis=1)
+        logits = lm_logits(params, sel, cfg=self.cfg, dtype=self.dtype)
         return logits, cache
 
     def decode_step(self, params, cache, tokens, cache_len):
@@ -109,6 +116,63 @@ class LanguageModel:
         )
         logits = lm_logits(params, hidden, cfg=self.cfg, dtype=self.dtype)
         return logits, cache
+
+    # -- serving: paged cache backend --------------------------------------
+    # The dense backend above owns a (B, max_len) cache pytree per slot;
+    # the paged backend owns a LayeredPagedKVCache (one refcounted block
+    # table shared by all layers over an (L, pages, page, 576) pool) and
+    # runs decode through the AMLA paged kernels.  runtime.serve_loop's
+    # ServingSession / PagedServingSession are the two sessions over these.
+
+    def paged_compatible(self) -> bool:
+        from repro.models import transformer
+
+        try:
+            transformer.check_paged_compatible(self.cfg)
+        except ValueError:
+            return False
+        return True
+
+    def init_paged_cache(
+        self, params, *, num_pages, page_size=None, dtype=None
+    ):
+        """A LayeredPagedKVCache sized for this model's latent geometry."""
+        del params
+        from repro.kernels.mla_decode_paged import DEFAULT_PAGE_SIZE
+        from repro.models import transformer
+        from repro.runtime.kv_cache import LayeredPagedKVCache
+
+        transformer.check_paged_compatible(self.cfg)
+        m = self.cfg.mla
+        return LayeredPagedKVCache(
+            num_layers=self.cfg.n_layers,
+            num_pages=num_pages,
+            page_size=page_size or DEFAULT_PAGE_SIZE,
+            width=m.d_latent + m.d_rope,
+            dtype=dtype or self.dtype,
+        )
+
+    def layer_params(self, params) -> list:
+        """Per-layer param list for the host-side paged layer walk."""
+        from repro.models import transformer
+
+        return transformer.per_layer_params(params, self.cfg)
+
+    def prefill_paged(self, params, cache, rid, tokens, **kw):
+        """Chunked prefill-into-pages; returns last-token logits (1, V)."""
+        from repro.models import transformer
+
+        return transformer.lm_prefill_paged(
+            params, tokens, cfg=self.cfg, cache=cache, rid=rid, **kw
+        )
+
+    def decode_step_paged(self, params, cache, rids, tokens, **kw):
+        """One paged decode step over live ``rids``; logits (B, 1, V)."""
+        from repro.models import transformer
+
+        return transformer.lm_decode_step_paged(
+            params, tokens, cfg=self.cfg, cache=cache, rids=rids, **kw
+        )
 
 
 class EncDecModel:

@@ -12,15 +12,25 @@ separate MLP (pure mixer stack, d_ff = 0).
 
 from __future__ import annotations
 
+import functools
 import math
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import layers, moe
 from repro.models.attention_layer import gqa_apply, gqa_init, init_kv_cache
-from repro.models.mla_layer import init_latent_cache, mla_apply, mla_init
+from repro.models.mla_layer import (
+    init_latent_cache,
+    mla_absorbed_queries,
+    mla_apply,
+    mla_init,
+    mla_latents,
+    mla_scale,
+    mla_unabsorb_output,
+)
 from repro.models.recurrent import (
     init_rglru_cache,
     rglru_block_apply,
@@ -273,3 +283,292 @@ def lm_apply(
 def lm_logits(params, hidden, *, cfg, dtype=jnp.bfloat16):
     table = params.get("unembed", params["embed"])
     return layers.unembed(table, hidden, dtype=dtype, softcap=cfg.final_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Paged cache backend: decode/prefill over a LayeredPagedKVCache
+# ---------------------------------------------------------------------------
+#
+# The dense path above threads a (B, max_len) cache pytree through lm_apply;
+# the paged path instead walks the layer stack host-side so each layer can
+# (1) append its 576-wide latent row(s) into the shared page pool and
+# (2) attend through ops.mla_decode_paged with ONE decode schedule built per
+# step and reused by every layer — all L layers share the same block table
+# and kv_len, so the (request, kv_block) work queue is identical for each.
+# Per-layer math is jitted (cfg is static: a frozen dataclass); only page
+# bookkeeping and kernel dispatch run eagerly.
+
+
+def check_paged_compatible(cfg) -> None:
+    """Paged serving covers MLA attention-only stacks (the paper's regime).
+
+    Recurrent/SSM layers keep per-slot state outside the latent pages, and
+    windowed ("local") attention needs window masking the paged kernels do
+    not implement — both serve via the dense backend.
+    """
+    if cfg.mla is None:
+        raise ValueError(
+            f"config {cfg.name!r} has no MLA geometry — the paged cache "
+            f"backend stores 576-wide latent rows (try deepseek-v2-mla, or "
+            f"serve this arch with the dense backend)"
+        )
+    kinds = set(cfg.layer_kinds())
+    if kinds != {"global"}:
+        raise ValueError(
+            f"paged serving needs an all-'global' attention stack; config "
+            f"{cfg.name!r} has layer kinds {sorted(kinds)}"
+        )
+
+
+def per_layer_params(params, cfg) -> list[dict]:
+    """Unstack scanned group params into an L-element per-layer list.
+
+    The scan-over-groups layout ((n_groups, ...) leaves) is what training
+    wants; the paged decode path walks layers host-side, so it slices each
+    layer's subtree out once (do this at session init, not per step).
+    """
+    n_groups, rem = _pattern_split(cfg)
+    period = len(cfg.layer_pattern)
+    out: list[dict] = []
+    for g in range(n_groups):
+        gp = jax.tree.map(lambda a: a[g], params["groups"])
+        out.extend(gp[f"pos{j}"] for j in range(period))
+    out.extend(params["rem"])
+    return out
+
+
+def _cfg_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _paged_embed(embed_params, tokens, *, cfg):
+    x = layers.embed(embed_params, tokens, dtype=_cfg_dtype(cfg))
+    if getattr(cfg, "embed_scale", False):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), _cfg_dtype(cfg))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _paged_attn_inputs(p_l, x, positions, *, cfg):
+    """Pre-attention half of one layer: latent rows + absorbed queries."""
+    dtype = _cfg_dtype(cfg)
+    h = layers.rmsnorm(p_l["ln1"], x, eps=cfg.norm_eps)
+    lat = mla_latents(p_l["attn"], h, cfg=cfg, positions=positions, dtype=dtype)
+    q = mla_absorbed_queries(
+        p_l["attn"], h, cfg=cfg, positions=positions, dtype=dtype
+    )
+    return lat, q
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _paged_layer_post(p_l, x, attn, *, cfg):
+    """Post-attention half: un-absorb, residual, MLP (mirrors layer_apply)."""
+    dtype = _cfg_dtype(cfg)
+    y = mla_unabsorb_output(p_l["attn"], attn.astype(dtype), cfg=cfg, dtype=dtype)
+    if cfg.post_norms:
+        y = layers.rmsnorm(p_l["post_ln1"], y, eps=cfg.norm_eps)
+    x = x + y
+    if _has_mlp(cfg, "global"):
+        h = layers.rmsnorm(p_l["ln2"], x, eps=cfg.norm_eps)
+        if cfg.n_experts:
+            y, _ = moe.moe_apply(p_l["mlp"], h, cfg=cfg, dtype=dtype)
+        else:
+            y = layers.mlp(p_l["mlp"], h, act=cfg.act, dtype=dtype)
+        if cfg.post_norms:
+            y = layers.rmsnorm(p_l["post_ln2"], y, eps=cfg.norm_eps)
+        x = x + y
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _paged_logits_at(params, x, idx, *, cfg):
+    """Final norm + unembedding of one position per batch row (dynamic
+    ``idx`` so ragged tail chunks don't retrace)."""
+    x = layers.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    sel = jax.lax.dynamic_slice_in_dim(x, idx, 1, axis=1)
+    return lm_logits(params, sel, cfg=cfg, dtype=_cfg_dtype(cfg))
+
+
+def _paged_attend(
+    q, cache, layer, bt, kv_len, *, cfg, block_k, schedule, q_offset,
+    num_splits, interpret, compute_dtype, variant,
+):
+    from repro.kernels import ops
+
+    return ops.mla_decode_paged(
+        q,
+        cache.layer_pages(layer),
+        bt,
+        kv_len,
+        d_v=cfg.mla.d_latent,
+        variant=variant,
+        scale=mla_scale(cfg),
+        interpret=interpret,
+        q_offset=q_offset,
+        scheduler="queue",
+        block_k=block_k,
+        num_splits=num_splits,
+        schedule=schedule,
+        compute_dtype=compute_dtype,
+    )
+
+
+def lm_prefill_paged(
+    params,
+    tokens,  # (S,) prompt token ids (host ints / 1D array)
+    *,
+    cfg,
+    cache,  # runtime.kv_cache.LayeredPagedKVCache
+    rid: int,
+    start_pos: int = 0,
+    chunk: int = 32,
+    table_width: int | None = None,
+    block_k: int | None = None,
+    variant: str = "amla",
+    interpret: bool = False,
+    layer_params: list | None = None,
+    compute_dtype=None,
+) -> jax.Array:
+    """Chunked prefill-into-pages; returns last-token logits ``(1, vocab)``.
+
+    The prompt is processed in fixed-size chunks of ``chunk`` tokens (the
+    tail chunk is zero-padded, so every chunk compiles to one shape): each
+    chunk's latents are appended into ``rid``'s pages layer by layer, and
+    each layer attends its ``chunk * H`` query rows over the request's pages
+    with per-row causal positions — which is also what makes a forked
+    request work: ``start_pos > 0`` (an ``admit_with_prefix`` suffix) scores
+    the new rows against the aliased prefix pages it never re-computes.
+    """
+    from repro.kernels import decode_schedule as _sched
+    from repro.kernels import ops
+
+    check_paged_compatible(cfg)
+    tokens = np.asarray(tokens, np.int32).reshape(-1)
+    s_total = int(tokens.shape[0])
+    if s_total < 1:
+        raise ValueError("prefill needs at least one token")
+    layers_p = layer_params if layer_params is not None else per_layer_params(
+        params, cfg
+    )
+    tw = table_width or cache.num_pages
+    if block_k is None:
+        block_k = ops.default_paged_block_k(cache.page_size, tw)
+    logits = None
+    for s0 in range(0, s_total, chunk):
+        valid = min(chunk, s_total - s0)
+        tok = np.zeros((1, chunk), np.int32)
+        tok[0, :valid] = tokens[s0 : s0 + valid]
+        abs0 = start_pos + s0
+        positions = jnp.asarray(abs0 + np.arange(chunk, dtype=np.int32))[None]
+        plan = cache.reserve(rid, valid)
+        bt, kv_len = cache.block_table([rid], width=tw)
+        # One schedule per chunk, shared by all L layers (same block table
+        # and kv_len everywhere) — kv_len is host numpy here, so this costs
+        # no device sync.
+        schedule = _sched.build_schedule(kv_len, block_k=block_k, num_splits=1)
+        bt, kv_len = jnp.asarray(bt), jnp.asarray(kv_len)
+        q_off = jnp.full((1,), abs0, jnp.int32)
+        x = _paged_embed(params["embed"], jnp.asarray(tok), cfg=cfg)
+        for l, p_l in enumerate(layers_p):
+            lat, q = _paged_attn_inputs(p_l, x, positions, cfg=cfg)
+            cache.write_layer(l, plan, lat[0, :valid])
+            attn = _paged_attend(
+                q, cache, l, bt, kv_len, cfg=cfg, block_k=block_k,
+                schedule=schedule, q_offset=q_off, num_splits=1,
+                interpret=interpret, compute_dtype=compute_dtype,
+                variant=variant,
+            )
+            x = _paged_layer_post(p_l, x, attn, cfg=cfg)
+        logits = _paged_logits_at(params, x, jnp.int32(valid - 1), cfg=cfg)
+    return logits[:, 0]
+
+
+def lm_decode_step_paged(
+    params,
+    tokens,  # (B, 1) int32 — one new token per live request, rid order
+    *,
+    cfg,
+    cache,  # runtime.kv_cache.LayeredPagedKVCache
+    rids: list[int],
+    scheduler=None,  # kernels.decode_schedule.DecodeScheduler (memoized)
+    prefix_sharing: bool = False,
+    extra_key=None,
+    table_width: int | None = None,
+    block_k: int | None = None,
+    num_splits: int = 1,
+    variant: str = "amla",
+    interpret: bool = False,
+    layer_params: list | None = None,
+    compute_dtype=None,
+) -> jax.Array:
+    """One paged full-model decode step; returns logits ``(B, 1, vocab)``.
+
+    Appends are atomic (OutOfPagesError raised before any page is claimed),
+    then each layer appends its latent row and attends.  The decode
+    schedule is built **once per step** — every layer shares the block
+    table and kv_len, so one (request, kv_block) work queue serves all L
+    attention calls (pass ``scheduler`` to also memoize it across steps;
+    its hit/rebuild counters then count steps, not layers — the
+    scheduler-stats acceptance check).
+    """
+    from repro.kernels import decode_schedule as _sched
+    from repro.kernels import ops
+    from repro.runtime.kv_cache import OutOfPagesError
+
+    check_paged_compatible(cfg)
+    if len(rids) == 0:
+        raise ValueError("decode step needs at least one live request")
+    layers_p = layer_params if layer_params is not None else per_layer_params(
+        params, cfg
+    )
+    tw = table_width or cache.num_pages
+    if block_k is None:
+        block_k = ops.default_paged_block_k(cache.page_size, tw)
+
+    positions = np.asarray([cache.seq_len(r) for r in rids], np.int32)
+    need = sum(cache.pages_needed_for_append(r, 1) for r in rids)
+    if need > cache.num_free_pages:
+        raise OutOfPagesError(
+            f"decode step needs {need} new pages for {len(rids)} appends; "
+            f"only {cache.num_free_pages} free — evict and retry"
+        )
+    plans = [cache.reserve(r, 1) for r in rids]
+    pids = np.asarray([p[0][0] for p in plans], np.int32)
+    offs = np.asarray([p[0][1] for p in plans], np.int32)
+    bt, kv_len = cache.block_table(rids, width=tw)
+
+    # One schedule per step, shared by all L layers (they see the same
+    # block tables): the memoizing scheduler additionally reuses it across
+    # steps until a request crosses a block_k boundary or the live set
+    # changes (extra_key).
+    if scheduler is not None:
+        if prefix_sharing:
+            schedule = scheduler.schedule_prefix(
+                kv_len, bt, page_size=cache.page_size, extra_key=extra_key
+            )
+        else:
+            schedule = scheduler.schedule(kv_len, extra_key=extra_key)
+    elif prefix_sharing:
+        schedule = _sched.build_prefix_schedule(
+            kv_len, bt, page_size=cache.page_size, block_k=block_k,
+            num_splits=num_splits,
+        )
+    else:
+        schedule = _sched.build_schedule(
+            kv_len, block_k=block_k, num_splits=num_splits
+        )
+
+    bt, kv_len = jnp.asarray(bt), jnp.asarray(kv_len)
+    x = _paged_embed(params["embed"], jnp.asarray(tokens, jnp.int32), cfg=cfg)
+    pos = jnp.asarray(positions)[:, None]
+    for l, p_l in enumerate(layers_p):
+        lat, q = _paged_attn_inputs(p_l, x, pos, cfg=cfg)
+        cache.write_layer_tokens(l, pids, offs, lat[:, 0])
+        attn = _paged_attend(
+            q, cache, l, bt, kv_len, cfg=cfg, block_k=block_k,
+            schedule=schedule, q_offset=None, num_splits=num_splits,
+            interpret=interpret, compute_dtype=compute_dtype, variant=variant,
+        )
+        x = _paged_layer_post(p_l, x, attn, cfg=cfg)
+    return _paged_logits_at(params, x, jnp.int32(0), cfg=cfg)

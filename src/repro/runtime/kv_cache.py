@@ -56,6 +56,49 @@ def _copy_page(pages, dst_pid, src_pid):
     return jax.lax.dynamic_update_slice(pages, page, (dst_pid, 0, 0))
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_rows_layered(pages, rows, pid, off):
+    """Write ``rows (L, n, W)`` into page ``pid`` of every layer at once."""
+    return jax.lax.dynamic_update_slice(
+        pages, rows[:, None].astype(pages.dtype), (0, pid, off, 0)
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_rows_one_layer(pages, rows, layer, pid, off):
+    """Write ``rows (n, W)`` into page ``pid`` of a single layer."""
+    return jax.lax.dynamic_update_slice(
+        pages, rows[None, None].astype(pages.dtype), (layer, pid, off, 0)
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_token_rows_one_layer(pages, rows, layer, pids, offs):
+    """Scatter one row per request into a single layer's pages.
+
+    The decode-step fast path: every live request appends exactly one
+    latent row per layer, so the per-layer write is one fori_loop of B
+    in-place slice updates instead of B separate dispatches.
+    """
+
+    def body(i, p):
+        return jax.lax.dynamic_update_slice(
+            p, rows[i][None, None, None].astype(p.dtype),
+            (layer, pids[i], offs[i], 0),
+        )
+
+    return jax.lax.fori_loop(0, rows.shape[0], body, pages)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_page_layered(pages, dst_pid, src_pid):
+    """Copy one physical page across **all** layers (layered COW fault)."""
+    page = jax.lax.dynamic_slice(
+        pages, (0, src_pid, 0, 0), (pages.shape[0], 1) + pages.shape[2:]
+    )
+    return jax.lax.dynamic_update_slice(pages, page, (0, dst_pid, 0, 0))
+
+
 class OutOfPagesError(RuntimeError):
     """Raised when an append needs more pages than the pool has free."""
 
@@ -91,8 +134,9 @@ class PagedKVCache:
         self.num_pages = num_pages
         self.page_size = page_size
         self.width = width
+        self.dtype = dtype
         self.debug = debug
-        self.pages = jnp.zeros((num_pages, page_size, width), dtype)
+        self.pages = self._make_pool()
         # FIFO free list: freed pages are reused in release order, so a
         # long-lived session naturally produces fragmented (non-contiguous,
         # non-monotone) block tables — which the kernel must not care about.
@@ -221,16 +265,33 @@ class PagedKVCache:
     # ------------------------------------------------------------------ #
     # data path
     # ------------------------------------------------------------------ #
-    def append(self, rid: int, rows: jax.Array) -> None:
-        """Append ``rows (n, width)`` to sequence ``rid``, allocating pages.
+    def _make_pool(self) -> jax.Array:
+        """Allocate the device page pool (layered subclasses override)."""
+        return jnp.zeros((self.num_pages, self.page_size, self.width), self.dtype)
 
-        Raises :class:`OutOfPagesError` (leaving the sequence unchanged) if
-        the pool cannot hold the new rows.
+    def _pool_copy_page(self, dst_pid: int, src_pid: int) -> None:
+        """Device-side page copy (the COW fault path)."""
+        self.pages = _copy_page(self.pages, jnp.int32(dst_pid), jnp.int32(src_pid))
+
+    def _pool_write(self, pid: int, off: int, rows: jax.Array) -> None:
+        """Device-side row write into one page."""
+        # jit'd + donated: a 1-row decode append is an in-place slice
+        # write, not an O(pool) copy.  Indices are traced scalars, so
+        # only distinct chunk lengths ``m`` trigger a retrace (decode
+        # appends are always m == 1).
+        self.pages = _write_rows(self.pages, rows, jnp.int32(pid), jnp.int32(off))
+
+    def reserve(self, rid: int, n: int) -> list[tuple[int, int, int]]:
+        """Bookkeeping half of an append: claim room for ``n`` more rows.
+
+        Allocates pages on demand, resolves copy-on-write for a shared
+        boundary page (the device copy happens here, once — for the layered
+        cache that is one copy covering *all* layers), and advances
+        ``seq_len``.  Returns the write plan as ``(page_id, offset, count)``
+        chunks; callers then fill the rows with :meth:`write_reserved` (or
+        per-layer via the layered cache's ``write_layer*``).  Raises
+        :class:`OutOfPagesError` up front, leaving the sequence unchanged.
         """
-        rows = jnp.asarray(rows, self.pages.dtype)
-        if rows.ndim != 2 or rows.shape[1] != self.width:
-            raise ValueError(f"rows must be (n, {self.width}); got {rows.shape}")
-        n = rows.shape[0]
         if not self.has_room(rid, n):
             raise OutOfPagesError(
                 f"append of {n} rows to seq {rid} needs more than the "
@@ -238,6 +299,7 @@ class PagedKVCache:
             )
         used = self._seq_len[rid]
         page_list = self._seq_pages[rid]
+        chunks: list[tuple[int, int, int]] = []
         off = 0
         while off < n:
             pos = used + off
@@ -249,26 +311,41 @@ class PagedKVCache:
                 # sibling/parent — give this request a private copy before
                 # the write.  Only ever the (partial) boundary page.
                 new_pid = self._grab_page()
-                self.pages = _copy_page(
-                    self.pages, jnp.int32(new_pid), jnp.int32(pid)
-                )
+                self._pool_copy_page(new_pid, pid)
                 self._ref[pid] -= 1
                 page_list[pos // self.page_size] = new_pid
                 pid = new_pid
             in_page = pos % self.page_size
             m = min(self.page_size - in_page, n - off)
-            # jit'd + donated: a 1-row decode append is an in-place slice
-            # write, not an O(pool) copy.  Indices are traced scalars, so
-            # only distinct chunk lengths ``m`` trigger a retrace (decode
-            # appends are always m == 1).
-            self.pages = _write_rows(
-                self.pages,
-                rows[off : off + m],
-                jnp.int32(pid),
-                jnp.int32(in_page),
-            )
+            chunks.append((pid, in_page, m))
             off += m
         self._seq_len[rid] = used + n
+        return chunks
+
+    def write_reserved(
+        self, chunks: list[tuple[int, int, int]], rows: jax.Array
+    ) -> None:
+        """Fill reserved chunks with ``rows`` (row count must match)."""
+        off = 0
+        for pid, in_page, m in chunks:
+            self._pool_write(pid, in_page, rows[off : off + m])
+            off += m
+
+    def _validate_rows(self, rows) -> jax.Array:
+        rows = jnp.asarray(rows, self.pages.dtype)
+        if rows.ndim != 2 or rows.shape[1] != self.width:
+            raise ValueError(f"rows must be (n, {self.width}); got {rows.shape}")
+        return rows
+
+    def append(self, rid: int, rows: jax.Array) -> None:
+        """Append ``rows (n, width)`` to sequence ``rid``, allocating pages.
+
+        Raises :class:`OutOfPagesError` (leaving the sequence unchanged) if
+        the pool cannot hold the new rows.
+        """
+        rows = self._validate_rows(rows)
+        # shape[-2] is the row count in both layouts: (n, W) and (L, n, W).
+        self.write_reserved(self.reserve(rid, rows.shape[-2]), rows)
 
     def block_table(
         self, rids: list[int], width: int | None = None
@@ -300,3 +377,141 @@ class PagedKVCache:
             return jnp.zeros((0, self.width), self.pages.dtype)
         parts = [self.pages[pid] for pid in self._seq_pages[rid]]
         return jnp.concatenate(parts, axis=0)[:n]
+
+
+class LayeredPagedKVCache(PagedKVCache):
+    """One block table + refcounts shared by all ``L`` layers of a model.
+
+    The full-model serving cache: the page *bookkeeping* (free list, block
+    tables, seq lens, refcounts, fork/COW/free) is exactly
+    :class:`PagedKVCache`'s and runs **once per request** — but the device
+    pool carries a leading layer axis ``(L, num_pages, page_size, width)``,
+    so page ``p`` of request ``r`` names the same physical slot in every
+    layer.  One ``fork`` aliases a prefix for all 60 layers of a DeepSeek
+    stack; one COW fault copies the boundary page across all layers in a
+    single device op; ``block_table`` returns one table the decode step
+    reuses for every layer (which is also what lets the serve loop build
+    one decode *schedule* per step instead of per layer).
+
+    The data path is two-phase so appends compose with the sequential layer
+    walk of a transformer: :meth:`reserve` claims the rows up front (once
+    per step), then each layer fills its own plane via :meth:`write_layer`
+    (chunked prefill) or :meth:`write_layer_tokens` (batched one-row decode
+    appends).  The inherited one-shot :meth:`append` takes ``(L, n, width)``
+    rows for callers that have all layers' latents in hand.
+    """
+
+    def __init__(
+        self,
+        *,
+        num_layers: int,
+        num_pages: int,
+        page_size: int = DEFAULT_PAGE_SIZE,
+        width: int = 576,
+        dtype=jnp.bfloat16,
+        debug: bool = False,
+    ):
+        if num_layers < 1:
+            raise ValueError("need at least one layer")
+        self.num_layers = num_layers
+        super().__init__(
+            num_pages=num_pages,
+            page_size=page_size,
+            width=width,
+            dtype=dtype,
+            debug=debug,
+        )
+
+    # -- pool hooks (layer-axis aware) --------------------------------- #
+    def _make_pool(self) -> jax.Array:
+        return jnp.zeros(
+            (self.num_layers, self.num_pages, self.page_size, self.width),
+            self.dtype,
+        )
+
+    def _pool_copy_page(self, dst_pid: int, src_pid: int) -> None:
+        # One COW fault copies the page across every layer in one op.
+        self.pages = _copy_page_layered(
+            self.pages, jnp.int32(dst_pid), jnp.int32(src_pid)
+        )
+
+    def _pool_write(self, pid: int, off: int, rows: jax.Array) -> None:
+        # rows (L, m, W): all-layer write (the one-shot append path).
+        self.pages = _write_rows_layered(
+            self.pages, rows, jnp.int32(pid), jnp.int32(off)
+        )
+
+    def _validate_rows(self, rows) -> jax.Array:
+        rows = jnp.asarray(rows, self.pages.dtype)
+        want = (self.num_layers, self.width)
+        if rows.ndim != 3 or (rows.shape[0], rows.shape[2]) != want:
+            raise ValueError(
+                f"rows must be (L={self.num_layers}, n, {self.width}); "
+                f"got {rows.shape}"
+            )
+        return rows
+
+    def write_reserved(
+        self, chunks: list[tuple[int, int, int]], rows: jax.Array
+    ) -> None:
+        """Fill reserved chunks with all-layer ``rows (L, n, width)``."""
+        off = 0
+        for pid, in_page, m in chunks:
+            self._pool_write(pid, in_page, rows[:, off : off + m])
+            off += m
+
+    # -- per-layer data path ------------------------------------------- #
+    def write_layer(
+        self, layer: int, chunks: list[tuple[int, int, int]], rows: jax.Array
+    ) -> None:
+        """Fill one layer's plane of reserved chunks with ``rows (n, W)``.
+
+        The chunked-prefill write: :meth:`reserve` once per chunk of
+        tokens, then every layer writes its latents into the same chunks.
+        """
+        rows = jnp.asarray(rows, self.pages.dtype)
+        off = 0
+        for pid, in_page, m in chunks:
+            self.pages = _write_rows_one_layer(
+                self.pages,
+                rows[off : off + m],
+                jnp.int32(layer),
+                jnp.int32(pid),
+                jnp.int32(in_page),
+            )
+            off += m
+
+    def write_layer_tokens(self, layer: int, pids, offs, rows) -> None:
+        """Write one row per request into one layer: ``rows (B, W)`` lands
+        at ``(layer, pids[i], offs[i])`` — the decode-step append, batched
+        into a single donated device call per layer.
+        """
+        self.pages = _write_token_rows_one_layer(
+            self.pages,
+            jnp.asarray(rows, self.pages.dtype),
+            jnp.int32(layer),
+            jnp.asarray(pids, jnp.int32),
+            jnp.asarray(offs, jnp.int32),
+        )
+
+    def layer_pages(self, layer: int) -> jax.Array:
+        """The ``(num_pages, page_size, width)`` pool of one layer."""
+        return self.pages[layer]
+
+    def gather_contiguous(self, rid: int, layer: int | None = None) -> jax.Array:
+        """Contiguous ``(len, width)`` rows of one layer (or ``(L, len,
+        width)`` for all layers when ``layer`` is None).  Test helper."""
+        n = self._seq_len[rid]
+        if n == 0:
+            shape = (
+                (self.num_layers, 0, self.width)
+                if layer is None
+                else (0, self.width)
+            )
+            return jnp.zeros(shape, self.pages.dtype)
+        axis = 1 if layer is None else 0
+        sel = self.pages if layer is None else self.pages[layer]
+        parts = [sel[:, pid] if layer is None else sel[pid]
+                 for pid in self._seq_pages[rid]]
+        out = jnp.concatenate(parts, axis=axis)
+        return out[:, :n] if layer is None else out[:n]

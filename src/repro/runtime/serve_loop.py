@@ -83,10 +83,35 @@ class ServingSession:
         self.outputs: dict[int, list[int]] = {}
         self._next_id = 0
         self._decode = jax.jit(model.decode_step)
+        # Bucketed prefill: right-pad prompts to the next power of two so a
+        # stream of ragged prompt lengths compiles O(log max_len) prefill
+        # shapes instead of one per distinct length.  Only attention stacks
+        # tolerate right-padding (causal masking keeps pad tokens invisible
+        # to real positions); recurrent/SSM state would ingest the pads, so
+        # those archs prefill at exact length.
+        kinds = model.cfg.layer_kinds() if hasattr(model.cfg, "layer_kinds") else []
+        self._bucket_prompts = bool(kinds) and all(
+            k in ("global", "local") for k in kinds
+        )
+        self._prefill = jax.jit(
+            lambda p, c, t, lp: model.prefill(p, c, t, last_pos=lp)
+        )
+        self._prefill_shapes: set[int] = set()
 
     @property
     def active_mask(self) -> np.ndarray:
         return np.asarray([r is not None for r in self.slot_rid])
+
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct prefill shapes compiled (== jit compiles of prefill)."""
+        return len(self._prefill_shapes)
+
+    def _bucket_len(self, plen: int) -> int:
+        if not self._bucket_prompts:
+            return plen
+        blen = 1 << max(plen - 1, 0).bit_length()
+        return max(min(blen, self.max_len), plen)
 
     def add_request(self, prompt_tokens) -> int | None:
         """Prefill a prompt into a free slot; returns request id or None."""
@@ -95,13 +120,21 @@ class ServingSession:
         slot = self.slot_rid.index(None)
         rid = self._next_id
         self._next_id += 1
-        prompt = jnp.asarray(prompt_tokens, jnp.int32)[None]
-        plen = prompt.shape[1]
+        prompt_tokens = list(map(int, prompt_tokens))
+        plen = len(prompt_tokens)
+        blen = self._bucket_len(plen)
+        padded = prompt_tokens + [0] * (blen - plen)
+        prompt = jnp.asarray(padded, jnp.int32)[None]
         # Prefill this slot by running the full-batch decode over the prompt
         # with only this slot's cache_len advancing (other rows are no-ops on
         # their own cache positions because their tokens re-write in place).
+        # Pad rows beyond plen are causally invisible and overwritten by the
+        # first decode steps (cache_len = plen masks them meanwhile).
         single = self.model.init_cache(self.params, 1, self.max_len)
-        logits, single = self.model.prefill(self.params, single, prompt)
+        self._prefill_shapes.add(blen)
+        logits, single = self._prefill(
+            self.params, single, prompt, jnp.int32(plen - 1)
+        )
         self.cache = jax.tree.map(
             lambda full, one: _write_slot(full, one, slot), self.cache, single
         )
@@ -134,6 +167,299 @@ class ServingSession:
         slot = self.slot_rid.index(rid)
         self.slot_rid[slot] = None
         self.cache_len[slot] = 0
+        # A reused slot must never decode from the previous request's token:
+        # clear the stale last_token with the slot (step() skips inactive
+        # slots, but the very next admit must start from its own prefill
+        # logits, not this leftover).
+        self.last_token[slot] = 0
+        assert self.cache_len[slot] == 0, (
+            f"slot {slot} freed with nonzero cache_len {self.cache_len[slot]}"
+        )
+        return self.outputs.pop(rid)
+
+
+class PagedServingSession:
+    """Full-model serving over the paged cache backend.
+
+    The paged twin of :class:`ServingSession`: the same greedy
+    add_request / step / finish surface, but the KV state is a
+    :class:`~repro.runtime.kv_cache.LayeredPagedKVCache` — one refcounted
+    block table shared by all L layers over an ``(L, pages, page, 576)``
+    latent pool — and decode runs through ``ops.mla_decode_paged`` via
+    ``models.transformer.lm_decode_step_paged``.  What that buys over dense
+    slots:
+
+    * admission is by free-page count (no per-slot ``max_len``
+      reservation); requests admit/evict mid-stream and a request's
+      context can grow until the *pool* is full;
+    * prompts prefill **into pages** in fixed-size chunks (one compiled
+      shape, reported via :attr:`prefill_compiles`);
+    * :meth:`fork` / :meth:`admit_with_prefix` branch a live request by
+      page aliasing — zero copies, one refcount bump covering every layer,
+      COW on the shared boundary page at the next append — turning the
+      PR 3 prefix-sharing machinery into a full-model product feature;
+    * the decode schedule is built **once per step** and reused by all L
+      layers (every layer shares the block table), and the memoizing
+      :class:`~repro.kernels.decode_schedule.DecodeScheduler` reuses it
+      across steps — :attr:`scheduler_stats` counts steps, not ``L x
+      steps``.
+    """
+
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        num_pages: int,
+        page_size: int | None = None,
+        block_k: int | None = None,
+        num_splits: int = 1,
+        prefix_sharing: bool = False,
+        min_group: int = 2,
+        prefill_chunk: int = 32,
+        max_batch: int | None = None,
+        interpret: bool | None = None,
+        dtype=None,
+    ):
+        from repro.kernels import ops
+        from repro.kernels.decode_schedule import DecodeScheduler
+        from repro.models import transformer as _tf
+
+        _tf.check_paged_compatible(model.cfg)
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.dtype = dtype or model.dtype
+        self.cache = model.init_paged_cache(
+            params, num_pages=num_pages, page_size=page_size, dtype=self.dtype
+        )
+        # Fixed block-table width: stable kernel input shapes across
+        # admits/evicts and page-boundary growth (see PagedDecodeSession).
+        self.table_width = num_pages
+        self.block_k = block_k or ops.default_paged_block_k(
+            self.cache.page_size, self.table_width
+        )
+        self.num_splits = num_splits
+        self.prefix_sharing = prefix_sharing
+        self.prefill_chunk = prefill_chunk
+        self.max_batch = max_batch
+        self.interpret = (
+            interpret
+            if interpret is not None
+            else not any(d.platform == "tpu" for d in jax.devices())
+        )
+        # fp32 smoke models keep fp32 kernel precision so paged greedy
+        # outputs stay bit-comparable with the dense fp32 backend; bf16
+        # serving uses the kernels' native bf16.
+        self.compute_dtype = jnp.float32 if self.dtype == jnp.float32 else None
+        self._scheduler = DecodeScheduler(
+            block_k=self.block_k, num_splits=num_splits, min_group=min_group
+        )
+        self._layers = _tf.per_layer_params(params, model.cfg)
+        self.active: list[int] = []
+        self.outputs: dict[int, list[int]] = {}
+        self.last_token: dict[int, int] = {}
+        self._next_id = 0
+        self._prefill_shapes: set[tuple] = set()
+        self._decode_shapes: set[int] = set()
+        # Deterministic work counters (benchmarks / regression proxies).
+        self.decode_steps = 0
+        self.page_dmas = 0
+        self.rows_attended = 0
+
+    # -- introspection ------------------------------------------------- #
+    @property
+    def scheduler_stats(self) -> dict:
+        """Schedule build/reuse counters.  ``hits + rebuilds`` equals the
+        number of decode steps — one schedule per step, never per layer."""
+        return {
+            "hits": self._scheduler.hits,
+            "rebuilds": self._scheduler.rebuilds,
+        }
+
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct prefill chunk shapes traced (fixed chunking => 1)."""
+        return len(self._prefill_shapes)
+
+    @property
+    def decode_compiles(self) -> int:
+        """Distinct live-batch sizes traced by decode."""
+        return len(self._decode_shapes)
+
+    def work_stats(self) -> dict:
+        """Deterministic decode-work proxies accumulated across steps."""
+        return {
+            "decode_steps": self.decode_steps,
+            "page_dmas": self.page_dmas,
+            "rows_attended": self.rows_attended,
+            "aliased_pages": self.cache.num_aliased_pages(),
+            "free_pages": self.cache.num_free_pages,
+        }
+
+    # -- admission / branching ----------------------------------------- #
+    def _admit(self, rid: int, first_token: int) -> int:
+        self.active.append(rid)
+        self.outputs[rid] = [first_token]
+        self.last_token[rid] = first_token
+        return rid
+
+    def add_request(self, prompt_tokens) -> int | None:
+        """Chunk-prefill a prompt into fresh pages; rid, or None when the
+        pool lacks pages / the batch is full (caller queues and retries)."""
+        from repro.models import transformer as _tf
+
+        prompt = list(map(int, prompt_tokens))
+        if self.max_batch is not None and len(self.active) >= self.max_batch:
+            return None
+        if not self.cache.has_room(None, len(prompt)):
+            return None
+        rid = self._next_id
+        self._next_id += 1
+        self.cache.alloc(rid)
+        self._prefill_shapes.add((1, self.prefill_chunk))
+        logits = _tf.lm_prefill_paged(
+            self.params,
+            prompt,
+            cfg=self.cfg,
+            cache=self.cache,
+            rid=rid,
+            chunk=self.prefill_chunk,
+            table_width=self.table_width,
+            block_k=self.block_k,
+            interpret=self.interpret,
+            layer_params=self._layers,
+            compute_dtype=self.compute_dtype,
+        )
+        return self._admit(rid, int(jnp.argmax(logits[0])))
+
+    def fork(self, rid: int, prefix_len: int | None = None) -> int:
+        """Branch a live request at its full history: the child aliases
+        every page (all L layers, one refcount bump) and continues with the
+        parent's pending token — greedy twins until COW divergence.  To
+        branch at an earlier point with new tokens, use
+        :meth:`admit_with_prefix`.
+        """
+        if rid not in self.active:
+            raise KeyError(f"request {rid} is not live")
+        if prefix_len is not None and prefix_len != self.cache.seq_len(rid):
+            raise ValueError(
+                "model-level fork shares the whole history (the pending "
+                "token is only defined there); use admit_with_prefix("
+                "parent, suffix_tokens, prefix_len) to branch earlier"
+            )
+        child = self._next_id
+        self._next_id += 1
+        self.cache.fork(rid, child)
+        self.active.append(child)
+        self.outputs[child] = list(self.outputs[rid])
+        self.last_token[child] = self.last_token[rid]
+        return child
+
+    def admit_with_prefix(
+        self, parent_rid: int, suffix_tokens, prefix_len: int | None = None
+    ) -> int | None:
+        """Admit a request as ``fork(parent, prefix_len) + prefill(suffix)``
+        — the shared-system-prompt / n-best entry point.  The prefix pages
+        are aliased (zero copies across all layers); only the suffix runs
+        through the model, attending over the shared pages.  Returns None
+        (nothing allocated) when the pool lacks pages for the suffix.
+        """
+        from repro.models import transformer as _tf
+
+        if parent_rid not in self.active:
+            raise KeyError(f"request {parent_rid} is not live")
+        suffix = list(map(int, suffix_tokens))
+        if not suffix:
+            raise ValueError(
+                "admit_with_prefix needs at least one suffix token "
+                "(use fork() for a zero-copy full branch)"
+            )
+        if self.max_batch is not None and len(self.active) >= self.max_batch:
+            return None
+        child = self._next_id
+        self._next_id += 1
+        self.cache.fork(parent_rid, child, prefix_len)
+        if not self.cache.has_room(child, len(suffix)):
+            self.cache.free(child)
+            return None
+        start = self.cache.seq_len(child)
+        self._prefill_shapes.add((1, self.prefill_chunk))
+        logits = _tf.lm_prefill_paged(
+            self.params,
+            suffix,
+            cfg=self.cfg,
+            cache=self.cache,
+            rid=child,
+            start_pos=start,
+            chunk=self.prefill_chunk,
+            table_width=self.table_width,
+            block_k=self.block_k,
+            interpret=self.interpret,
+            layer_params=self._layers,
+            compute_dtype=self.compute_dtype,
+        )
+        return self._admit(child, int(jnp.argmax(logits[0])))
+
+    # -- decode --------------------------------------------------------- #
+    def step(self) -> None:
+        """One greedy decode step for every live request (one schedule)."""
+        from repro.kernels.decode_schedule import (
+            PrefixSchedule,
+            prefix_queue_grid_items,
+            queue_grid_items,
+        )
+        from repro.models import transformer as _tf
+
+        rids = list(self.active)
+        if not rids:
+            return
+        tokens = np.asarray(
+            [self.last_token[r] for r in rids], np.int32
+        )[:, None]
+        logits = _tf.lm_decode_step_paged(
+            self.params,
+            tokens,
+            cfg=self.cfg,
+            cache=self.cache,
+            rids=rids,
+            scheduler=self._scheduler,
+            prefix_sharing=self.prefix_sharing,
+            extra_key=tuple(rids),
+            table_width=self.table_width,
+            block_k=self.block_k,
+            num_splits=self.num_splits,
+            interpret=self.interpret,
+            layer_params=self._layers,
+            compute_dtype=self.compute_dtype,
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        for i, r in enumerate(rids):
+            self.outputs[r].append(int(nxt[i]))
+            self.last_token[r] = int(nxt[i])
+        # Deterministic work accounting: the schedule the step just used,
+        # scaled by L (every layer replays the same queue).
+        self.decode_steps += 1
+        self._decode_shapes.add(len(rids))
+        sched = self._scheduler.current
+        kv = np.asarray([self.cache.seq_len(r) for r in rids], np.int64)
+        acct = (
+            prefix_queue_grid_items(sched, kv, self.cache.page_size)
+            if isinstance(sched, PrefixSchedule)
+            else queue_grid_items(sched, kv, self.cache.page_size)
+        )
+        n_layers = self.cfg.n_layers
+        self.page_dmas += int(acct["page_dmas"]) * n_layers
+        self.rows_attended += int(kv.sum()) * n_layers
+
+    def finish(self, rid: int) -> list[int]:
+        """Retire ``rid``: pages return to the pool (aliased prefix pages
+        stay until their last owner goes); returns the generated tokens."""
+        if rid not in self.active:
+            raise KeyError(f"request {rid} is not live")
+        self.active.remove(rid)
+        self.cache.free(rid)
+        self.last_token.pop(rid, None)
         return self.outputs.pop(rid)
 
 

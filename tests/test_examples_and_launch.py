@@ -62,6 +62,36 @@ def test_example_serve_paged_decode():
     assert "paged vs contiguous" in out and "OK" in out
 
 
+@pytest.mark.slow
+def test_example_serve_paged_model():
+    out = run_script(["examples/serve_paged_model.py"])
+    assert "== dense" in out and "one per step, never per layer" in out
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_serve_driver_paged_backend():
+    out = run_script(
+        [
+            "-m", "repro.launch.serve", "--cache", "paged", "--smoke",
+            "--requests", "2", "--gen-len", "4", "--batch", "2",
+        ]
+    )
+    assert "paged cache backend" in out and "served 2 requests" in out
+    assert "prefill compiles: 1" in out
+
+
+@pytest.mark.slow
+def test_serve_driver_shared_prefix_demo():
+    out = run_script(
+        [
+            "-m", "repro.launch.serve", "--cache", "paged", "--smoke",
+            "--shared-prefix", "--gen-len", "3",
+        ]
+    )
+    assert "pages aliased" in out and "zero rows copied" in out
+
+
 def test_example_serve_shared_prefix():
     out = run_script(["examples/serve_shared_prefix.py"])
     assert "x dedup" in out and "shared-prefix vs contiguous" in out
