@@ -134,6 +134,7 @@ def _serve_scenario(cfg, model, params, g, *, shared_prefix: bool) -> dict:
         "tokens_per_s_dense": toks / max(dt_dense, 1e-9),
         "tokens_per_s_paged": toks / max(dt_paged, 1e-9),
         "page_dmas_paged": work["page_dmas"],
+        "page_dma_bytes_paged": work["page_dma_bytes"],
         "rows_attended_paged": work["rows_attended"],
         "dense_row_reads": dense_row_reads,
         "read_reduction_vs_dense": dense_row_reads / max(fetched_rows, 1),
@@ -142,6 +143,49 @@ def _serve_scenario(cfg, model, params, g, *, shared_prefix: bool) -> dict:
         "prefill_compiles_paged": paged.prefill_compiles,
         "prefill_compiles_dense": dense.prefill_compiles,
         "aliased_pages": work["aliased_pages"],
+    }
+
+
+def _dtype_scenario(cfg, model, params, g) -> dict:
+    """Int8-vs-bf16 cache-dtype row: the same ragged request stream served
+    through two paged sessions that differ only in kv_dtype.
+
+    Identical schedules fetch identical page counts; what the dtype changes
+    is **bytes per page** (the bandwidth decode is bound by) — ISSUE-5
+    gates ``dma_bytes_reduction_vs_bf16 >= 1.9`` — plus greedy parity,
+    reported as the fraction of requests whose tokens match exactly.
+    """
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(2, cfg.vocab_size, size=n).tolist() for n in g["prompts"]
+    ]
+    sessions, outs, dts = {}, {}, {}
+    for name in ("bf16", "int8"):
+        sess = PagedServingSession(
+            model, params, num_pages=g["num_pages"], page_size=g["page"],
+            block_k=g["block_k"], prefill_chunk=g["chunk"], kv_dtype=name,
+        )
+        rids = [sess.add_request(p) for p in prompts]
+        dts[name] = _timed_steps(sess, g["steps"])
+        sessions[name] = sess
+        outs[name] = [sess.outputs[r] for r in rids]
+    toks = len(prompts) * g["steps"]
+    work = {k: s.work_stats() for k, s in sessions.items()}
+    matches = sum(a == b for a, b in zip(outs["bf16"], outs["int8"]))
+    return {
+        "requests": len(prompts),
+        "decode_steps": work["int8"]["decode_steps"],
+        "tokens_per_s_paged": toks / max(dts["int8"], 1e-9),
+        "tokens_per_s_paged_bf16": toks / max(dts["bf16"], 1e-9),
+        "page_dmas_paged": work["int8"]["page_dmas"],
+        "page_dma_bytes_paged": work["int8"]["page_dma_bytes"],
+        "page_dma_bytes_bf16": work["bf16"]["page_dma_bytes"],
+        "dma_bytes_reduction_vs_bf16": (
+            work["bf16"]["page_dma_bytes"]
+            / max(work["int8"]["page_dma_bytes"], 1)
+        ),
+        "greedy_match_vs_bf16": matches / len(prompts),
+        "schedule_rebuilds": sessions["int8"].scheduler_stats["rebuilds"],
     }
 
 
@@ -156,11 +200,25 @@ def run(full: bool = False, smoke: bool = False) -> dict:
         for k, v in sorted(res.items()):
             val = f"{v:.1f}" if isinstance(v, float) else v
             print(f"model_serve,{name},{k},{val}")
+    res = _dtype_scenario(cfg, model, params, g)
+    report["scenarios"]["int8_vs_bf16"] = res
+    for k, v in sorted(res.items()):
+        val = f"{v:.2f}" if isinstance(v, float) else v
+        print(f"model_serve,int8_vs_bf16,{k},{val}")
     rag = report["scenarios"]["ragged"]
     print(
         f"model_serve,summary,read_reduction_vs_dense,"
         f"{rag['read_reduction_vs_dense']:.1f},schedules_per_step,"
         f"{(rag['schedule_rebuilds'] + rag['schedule_hits']) / max(rag['decode_steps'], 1):.2f}"
+    )
+    int8_ok = (
+        res["dma_bytes_reduction_vs_bf16"] >= 1.9
+        and res["greedy_match_vs_bf16"] == 1.0
+    )
+    print(
+        f"model_serve,acceptance_int8,dma_bytes_reduction,"
+        f"{res['dma_bytes_reduction_vs_bf16']:.2f},greedy_match,"
+        f"{res['greedy_match_vs_bf16']:.2f},pass,{int(int8_ok)}"
     )
     return report
 

@@ -44,7 +44,7 @@ from repro.kernels.decode_schedule import (
     prefix_queue_grid_items,
     queue_grid_items,
 )
-from repro.runtime.kv_cache import PagedKVCache
+from repro.runtime.kv_cache import CacheSpec, PagedKVCache
 
 
 def _on_tpu() -> bool:
@@ -208,6 +208,13 @@ def _run_scenario(name, kv_lens, *, hq, dk, dv, page, block_k, iters,
         "executed_items_queue": queue_work["executed_items"],
         "page_dmas_padded": padded_work["page_dmas"],
         "page_dmas_queue": queue_work["page_dmas"],
+        # dtype-aware traffic: DMA count x bytes one page moves at this
+        # pool's storage layout (decode MLA is bandwidth-bound, so *bytes*
+        # — not counts — are what the cache-dtype lever changes).
+        "page_dma_bytes_padded": padded_work["page_dmas"]
+        * kv.spec.bytes_per_page(page, dk),
+        "page_dma_bytes_queue": queue_work["page_dmas"]
+        * kv.spec.bytes_per_page(page, dk),
         # grid-step ratio: fewer, bigger steps (§4.2 block granularity vs
         # page granularity) *and* schedule compaction
         "work_item_ratio": padded_work["grid_steps"]
@@ -298,6 +305,65 @@ def _run_prefix_scenario(name, group_size, prefix_len, suffix_mean, *,
     }
 
 
+def _run_int8_scenario(name, kv_lens, *, hq, dk, dv, page, block_k, iters,
+                       interpret) -> dict:
+    """Int8-vs-bf16 storage row: the same ragged batch decoded through a
+    bf16 pool and through an int8+scales pool (fused in-pipeline dequant).
+
+    The headline is ``dma_bytes_reduction_vs_bf16``: identical schedules
+    fetch identical page *counts*, but each int8 page moves about half the
+    bytes (ISSUE-5 acceptance: >= 1.9x) — with |int8 − bf16| <= 3e-2
+    fp32-combined parity riding along.
+    """
+    b = len(kv_lens)
+    rng = np.random.default_rng(0)
+    scale = 1.0 / dk**0.5
+    q = jnp.asarray(rng.normal(0, 0.3, (b, 1, hq, dk)), jnp.bfloat16)
+    num_pages = sum(-(-l // page) for l in kv_lens) + 1
+    pools = {
+        "bf16": PagedKVCache(num_pages=num_pages, page_size=page, width=dk),
+        "int8": PagedKVCache(num_pages=num_pages, page_size=page, width=dk,
+                             spec=CacheSpec(dtype=jnp.int8)),
+    }
+    for rid, l in enumerate(kv_lens):
+        data = rng.normal(0, 0.3, (l, dk)).astype(np.float32)
+        for kv in pools.values():
+            kv.alloc(rid)
+            kv.append(rid, data)
+    kv_len = jnp.asarray(kv_lens, jnp.int32)
+    schedule = build_schedule(kv_lens, block_k=block_k)
+    work = queue_grid_items(schedule, kv_lens, page)
+
+    def decode(kv):
+        bt, _ = kv.block_table(list(range(b)))
+        return ops.mla_decode_paged(
+            q, kv.pages, jnp.asarray(bt), kv_len, kv_scales=kv.scales,
+            d_v=dv, scale=scale, interpret=interpret, block_k=block_k,
+            schedule=schedule,
+        )
+
+    max_abs = float(jnp.max(jnp.abs(decode(pools["int8"])
+                                    - decode(pools["bf16"]))))
+    ms = {k: _time(lambda kv=kv: decode(kv), iters)
+          for k, kv in pools.items()}
+    dma_bytes = {
+        k: work["page_dmas"] * kv.spec.bytes_per_page(page, dk)
+        for k, kv in pools.items()
+    }
+    return {
+        "b": b,
+        "kv_lens": list(map(int, kv_lens)),
+        "ms_per_step_bf16": ms["bf16"],
+        "ms_per_step_int8": ms["int8"],
+        "tokens_per_s_int8": b / (ms["int8"] / 1e3),
+        "page_dmas_queue": work["page_dmas"],
+        "page_dma_bytes_bf16": dma_bytes["bf16"],
+        "page_dma_bytes_int8": dma_bytes["int8"],
+        "dma_bytes_reduction_vs_bf16": dma_bytes["bf16"] / dma_bytes["int8"],
+        "max_abs_diff_int8_vs_bf16": max_abs,
+    }
+
+
 def run(full: bool = False, smoke: bool = False, num_splits: int = 2) -> dict:
     interpret = not _on_tpu()
     tier = "full" if full else ("smoke" if smoke else "default")
@@ -344,7 +410,8 @@ def run(full: bool = False, smoke: bool = False, num_splits: int = 2) -> dict:
             f"work_item_ratio,{res['work_item_ratio']:.2f},"
             f"compaction_ratio,{res['compaction_ratio']:.2f},"
             f"page_dmas_padded,{res['page_dmas_padded']},"
-            f"page_dmas_queue,{res['page_dmas_queue']}"
+            f"page_dmas_queue,{res['page_dmas_queue']},"
+            f"page_dma_bytes_queue,{res['page_dma_bytes_queue']}"
         )
         print(
             f"paged_decode,scenario,{name},"
@@ -376,6 +443,34 @@ def run(full: bool = False, smoke: bool = False, num_splits: int = 2) -> dict:
             f"items_unshared,{res['executed_items_unshared']},"
             f"max_abs,{res['max_abs_diff_shared_vs_unshared']:.3e}"
         )
+
+    # int8-vs-bf16 storage row: same ragged batch, both cache dtypes.
+    report["int8_scenarios"] = {}
+    res = _run_int8_scenario(
+        "ragged_int8", g["scenarios"]["ragged"],
+        hq=g["hq"], dk=g["dk"], dv=g["dv"], page=g["page"],
+        block_k=g["block_k"], iters=g["iters"], interpret=interpret,
+    )
+    report["int8_scenarios"]["ragged_int8"] = res
+    print(
+        f"paged_decode,int8_scenario,ragged_int8,b,{res['b']},"
+        f"ms_bf16,{res['ms_per_step_bf16']:.3f},"
+        f"ms_int8,{res['ms_per_step_int8']:.3f},"
+        f"page_dma_bytes_bf16,{res['page_dma_bytes_bf16']},"
+        f"page_dma_bytes_int8,{res['page_dma_bytes_int8']},"
+        f"dma_bytes_reduction,{res['dma_bytes_reduction_vs_bf16']:.2f},"
+        f"max_abs_int8_vs_bf16,{res['max_abs_diff_int8_vs_bf16']:.3e}"
+    )
+    # ISSUE-5 acceptance: >= 1.9x byte reduction at <= 3e-2 parity.
+    int8_ok = (
+        res["dma_bytes_reduction_vs_bf16"] >= 1.9
+        and res["max_abs_diff_int8_vs_bf16"] <= 3e-2
+    )
+    print(
+        f"paged_decode,acceptance_int8_bytes,"
+        f"{res['dma_bytes_reduction_vs_bf16']:.2f},target,1.9,"
+        f"parity,{res['max_abs_diff_int8_vs_bf16']:.3e},pass,{int(int8_ok)}"
+    )
 
     ragged = report["scenarios"]["ragged"]
     ok = ragged["work_item_ratio"] >= 1.5

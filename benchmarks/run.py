@@ -60,30 +60,61 @@ def _summarize(report: dict) -> dict:
         "scenarios": {},
         "prefix_scenarios": {},
     }
+    def pick(name, res, required, optional=()):
+        # Loud on missing *required* metrics: a renamed/dropped benchmark
+        # field must crash the run here, not silently vanish from the
+        # history and un-gate its regression check downstream.
+        missing = [k for k in required if k not in res]
+        if missing:
+            raise KeyError(
+                f"benchmark scenario {name!r} stopped emitting gated "
+                f"metrics {missing} — update the benchmark or this summary"
+            )
+        keys = tuple(required) + tuple(optional)
+        return {k: res[k] for k in keys if k in res}
+
     for name, res in report.get("scenarios", {}).items():
-        out["scenarios"][name] = {
-            "tokens_per_s_queue": res["tokens_per_s_queue"],
-            "work_item_ratio": res["work_item_ratio"],
-            "page_dmas_queue": res["page_dmas_queue"],
-            "rescale_skip_rate": res["rescale_skip_rate"],
-        }
+        out["scenarios"][name] = pick(name, res, (
+            "tokens_per_s_queue",
+            "work_item_ratio",
+            "page_dmas_queue",
+            "page_dma_bytes_queue",
+            "rescale_skip_rate",
+        ))
     for name, res in report.get("prefix_scenarios", {}).items():
-        out["prefix_scenarios"][name] = {
-            "tokens_per_s_shared": res["tokens_per_s_shared"],
-            "tokens_per_s_unshared": res["tokens_per_s_unshared"],
-            "prefix_dma_reduction": res["prefix_dma_reduction"],
-            "page_dmas_shared": res["page_dmas_shared"],
-        }
+        out["prefix_scenarios"][name] = pick(name, res, (
+            "tokens_per_s_shared",
+            "tokens_per_s_unshared",
+            "prefix_dma_reduction",
+            "page_dmas_shared",
+        ))
+    if report.get("int8_scenarios"):
+        out["int8_scenarios"] = {}
+        for name, res in report["int8_scenarios"].items():
+            out["int8_scenarios"][name] = pick(name, res, (
+                "tokens_per_s_int8",
+                "page_dma_bytes_bf16",
+                "page_dma_bytes_int8",
+                "dma_bytes_reduction_vs_bf16",
+                "max_abs_diff_int8_vs_bf16",
+            ))
     if report.get("model_serve"):
         out["model_serve"] = {}
         for name, res in report["model_serve"].items():
-            out["model_serve"][name] = {
-                "tokens_per_s_paged": res["tokens_per_s_paged"],
-                "tokens_per_s_dense": res["tokens_per_s_dense"],
-                "page_dmas_paged": res["page_dmas_paged"],
-                "read_reduction_vs_dense": res["read_reduction_vs_dense"],
-                "schedule_rebuilds": res["schedule_rebuilds"],
-            }
+            # dense-twin and dtype-comparison metrics are optional: the
+            # int8_vs_bf16 row has no dense session and the dense-vs-paged
+            # rows no dtype twin — but what a row measures, it must keep.
+            out["model_serve"][name] = pick(name, res, (
+                "tokens_per_s_paged",
+                "page_dmas_paged",
+                "page_dma_bytes_paged",
+                "schedule_rebuilds",
+            ), optional=(
+                "tokens_per_s_dense",
+                "dma_bytes_reduction_vs_bf16",
+                "greedy_match_vs_bf16",
+                "read_reduction_vs_dense",
+            ))
     return out
 
 
@@ -129,7 +160,8 @@ def merge_baseline_sections(report: dict, baseline_path: str) -> dict:
         report.get("tier"), report.get("mode")
     ):
         return report
-    for key in ("scenarios", "prefix_scenarios", "model_serve"):
+    for key in ("scenarios", "prefix_scenarios", "int8_scenarios",
+                "model_serve"):
         if not report.get(key) and base.get(key):
             report[key] = base[key]
             print(f"paged_decode,baseline_carryover,{key},from,{baseline_path}")
@@ -177,13 +209,21 @@ def check_regression(report: dict, baseline_path: str, tol: float) -> list:
         ("prefix_scenarios", "tokens_per_s_shared", False, on_tpu),
         ("scenarios", "page_dmas_queue", True, not on_tpu),
         ("scenarios", "grid_steps_queue", True, not on_tpu),
+        # dtype-aware traffic: page-DMA *bytes* are the bandwidth proxy the
+        # cache-dtype lever moves; gated so a storage-layout regression
+        # (e.g. silently falling back to bf16) fails CI.
+        ("scenarios", "page_dma_bytes_queue", True, not on_tpu),
+        ("int8_scenarios", "page_dma_bytes_int8", True, not on_tpu),
+        ("int8_scenarios", "dma_bytes_reduction_vs_bf16", False, not on_tpu),
         ("prefix_scenarios", "page_dmas_shared", True, not on_tpu),
         ("prefix_scenarios", "executed_items_shared", True, not on_tpu),
         ("prefix_scenarios", "prefix_dma_reduction", False, not on_tpu),
         # [MODEL-SERVE]: real tokens/s on TPU; deterministic schedule work
-        # (page DMAs, rebuild count, dense-read reduction) in interpret CI.
+        # (page DMAs/bytes, rebuild count, dense-read reduction) in CI.
         ("model_serve", "tokens_per_s_paged", False, on_tpu),
         ("model_serve", "page_dmas_paged", True, not on_tpu),
+        ("model_serve", "page_dma_bytes_paged", True, not on_tpu),
+        ("model_serve", "dma_bytes_reduction_vs_bf16", False, not on_tpu),
         ("model_serve", "schedule_rebuilds", True, not on_tpu),
         ("model_serve", "read_reduction_vs_dense", False, not on_tpu),
     ]

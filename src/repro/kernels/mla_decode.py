@@ -87,7 +87,8 @@ def init_decode_state(acc_ref, m_ref, l_ref, n_ref, gamma_ref, s16_ref):
 
 
 def preload_block_scores(
-    q_ref, kv_view, *, n_sub, sub_k, src, live, sem, first_prefetched
+    q_ref, kv_view, *, n_sub, sub_k, src, live, sem, first_prefetched,
+    scale_view=None, scale_src=None, scale_sem=None,
 ):
     """§4.2 preload pipeline over one KV block, shared by both decode kernels.
 
@@ -104,6 +105,16 @@ def preload_block_scores(
     Copies run one sub-tile ahead of the score matmul; dead tail sub-tiles
     are zero-filled in VMEM instead of DMA'd.  Returns the concatenated
     (G, n_sub*sub_k) FP32 score strip.
+
+    **Quantized side-channel** (int8 latent pages): when ``scale_view`` — a
+    ``(1, n_sub*sub_k)`` FP32 staging slot — is given, each sub-tile's
+    per-row dequant scales (``scale_src(j)``, a ``(1, sub_k)`` HBM slice)
+    ride the same one-ahead DMA pipeline on their own semaphores, and the
+    sub-tile's raw int8 score strip is multiplied by them right after the
+    matmul — the dequant costs a (G, sub_k) VPU multiply inside the
+    DMA-overlap window instead of a pool-sized cast anywhere.  The staged
+    sub-tile is cast to ``q_ref.dtype`` at matmul time, which also covers
+    the fp32-compute-over-bf16-pages path scale-free.
     """
 
     def dma(j):
@@ -111,6 +122,13 @@ def preload_block_scores(
             src(j),
             kv_view.at[pl.ds(j * sub_k, sub_k), :],
             sem.at[j],
+        )
+
+    def sdma(j):
+        return pltpu.make_async_copy(
+            scale_src(j),
+            scale_view.at[:, pl.ds(j * sub_k, sub_k)],
+            scale_sem.at[j],
         )
 
     def issue(j):
@@ -121,6 +139,8 @@ def preload_block_scores(
         @pl.when(cond)
         def _start():
             dma(j).start()
+            if scale_view is not None:
+                sdma(j).start()
 
         # Tail sub-tiles past kv_len cost vector stores, never DMAs.
         @pl.when(jnp.logical_not(live(j)))
@@ -128,11 +148,17 @@ def preload_block_scores(
             kv_view[pl.ds(j * sub_k, sub_k), :] = jnp.zeros(
                 (sub_k, kv_view.shape[1]), kv_view.dtype
             )
+            if scale_view is not None:
+                scale_view[:, pl.ds(j * sub_k, sub_k)] = jnp.zeros(
+                    (1, sub_k), scale_view.dtype
+                )
 
     def wait(j):
         @pl.when(live(j))
         def _wait():
             dma(j).wait()
+            if scale_view is not None:
+                sdma(j).wait()
 
     issue(0)
     parts = []
@@ -140,17 +166,28 @@ def preload_block_scores(
         if j + 1 < n_sub:
             issue(j + 1)
         wait(j)
+        strip = kv_view[pl.ds(j * sub_k, sub_k), :]
+        if strip.dtype != q_ref.dtype:
+            # int8 pages (and bf16 pages under fp32 compute) are cast
+            # per-strip here, inside the pipeline — never a whole pool.
+            strip = strip.astype(q_ref.dtype)
         s_j = jax.lax.dot_general(
             q_ref[...],
-            kv_view[pl.ds(j * sub_k, sub_k), :],
+            strip,
             (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
+        if scale_view is not None:
+            # Per-key-row dequant: score column j scales by its row's σ.
+            s_j = s_j * scale_view[:, pl.ds(j * sub_k, sub_k)]
         parts.append(s_j)
     return jnp.concatenate(parts, axis=1) if n_sub > 1 else parts[0]
 
 
-def prefetch_next_first_subtile(src0, kv_view_next, sem, *, sub_k, cond):
+def prefetch_next_first_subtile(
+    src0, kv_view_next, sem, *, sub_k, cond,
+    scale_src0=None, scale_view_next=None, scale_sem=None,
+):
     """Cross-grid-step lookahead: start the *next* block's sub-tile-0 copy.
 
     Called at the end of a block's compute so the copy overlaps the state
@@ -158,7 +195,9 @@ def prefetch_next_first_subtile(src0, kv_view_next, sem, *, sub_k, cond):
     on its first sub-tile the way a cold start would.  ``cond`` must be
     computable identically at this step and the next (both read the same
     scalar-prefetched arrays), so starts and waits pair up exactly; the
-    destination is the *other* slot of the double-buffered scratch.
+    destination is the *other* slot of the double-buffered scratch.  The
+    quantized side-channel (``scale_*``, see :func:`preload_block_scores`)
+    prefetches the next block's scale strip under the same condition.
     """
 
     @pl.when(cond)
@@ -168,6 +207,12 @@ def prefetch_next_first_subtile(src0, kv_view_next, sem, *, sub_k, cond):
             kv_view_next.at[pl.ds(0, sub_k), :],
             sem.at[0],
         ).start()
+        if scale_view_next is not None:
+            pltpu.make_async_copy(
+                scale_src0(),
+                scale_view_next.at[:, pl.ds(0, sub_k)],
+                scale_sem.at[0],
+            ).start()
 
 
 def decode_block_update(
@@ -178,6 +223,7 @@ def decode_block_update(
     d_v: int,
     variant: str,
     mm_dtype,
+    kv_scale=None,  # (1, Bk) f32 per-row dequant scales (int8 pages only)
 ):
     """One KV-block online-softmax update shared by the contiguous and paged
     decode kernels.
@@ -186,6 +232,13 @@ def decode_block_update(
     (``numerics.pow2_int_increment`` / ``apply_int_increment``), skipped
     entirely when the increment is all-zero; ``"base"`` is Algorithm 1's
     FP32-multiply rescale on every block.
+
+    With int8 latent pages the true value rows are ``σ_j * q8_j``; rather
+    than materialising a dequantized block, ``kv_scale`` folds σ into the
+    probability rows (a (G, Bk) VPU multiply) so the PV matmul runs on the
+    raw int8 block — the AMLA state (m, l, n, γ, S16) is invariant to
+    where the σ multiply lands, and ``s`` already arrived dequantized from
+    :func:`preload_block_scores`.
     """
     # [V1] (VPU): online softmax + power-of-two scale split.
     m_prev = m_ref[...]
@@ -205,7 +258,8 @@ def decode_block_update(
         n_ref[...] = n_new
         gamma_ref[...] = gamma_new
         s16_ref[...] = s16
-        p_mm = (p * s16).astype(mm_dtype)
+        p_v = p * s16 if kv_scale is None else p * s16 * kv_scale
+        p_mm = p_v.astype(mm_dtype)
 
         # MUL-by-ADD rescale, skipped when the increment is all-zero
         # (the [V2]-elimination at the heart of the paper).
@@ -216,12 +270,16 @@ def decode_block_update(
     else:  # base: Algorithm 1's FP32-multiply rescale, every block
         alpha = jnp.exp(m_prev - m_new)
         acc_ref[...] = acc_ref[...] * alpha
-        p_mm = p.astype(mm_dtype)
+        p_mm = (p if kv_scale is None else p * kv_scale).astype(mm_dtype)
 
     # [C2] (MXU): T = P V with V = first d_v columns of the latent block.
+    v_blk = c_blk[..., :d_v]
+    if v_blk.dtype != mm_dtype:
+        # int8 pages / fp32 compute over bf16 pages: cast this block only.
+        v_blk = v_blk.astype(mm_dtype)
     t = jax.lax.dot_general(
         p_mm,
-        c_blk[..., :d_v],
+        v_blk,
         (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )

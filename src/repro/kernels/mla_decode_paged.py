@@ -52,10 +52,23 @@ tiling is 16, f32 is 8) and 4 pages make up the paper's §4.2 KV block of
 512.  The queue kernel's one-update-per-512-rows folding keeps the AMLA
 rescale-skip statistics at the paper's block granularity while the DMA
 granularity stays one page.
+
+**Quantized pools** (:class:`CacheSpec` with ``dtype=int8``): the pool
+stores symmetric per-row int8 latents and a companion ``(P, page_size)``
+fp32 scale pool.  The queue kernel stages each page's int8 strip *and* its
+scale strip through the same double-buffered ``make_async_copy`` pipeline
+(scale strips on their own semaphores, prefetched cross-step alongside the
+data), multiplies the scales into the per-page score strip right after the
+MXU matmul and folds them into the probability rows before the PV
+accumulate — so dequantization costs two VPU multiplies inside the
+DMA-overlap window, page DMAs move ~half the bytes, and the AMLA
+MUL-by-ADD state machine sees the same fp32 state as a bf16 pool.  The
+padded baseline grid has no dequant path and stays bf16-only.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -69,6 +82,68 @@ from repro.core import numerics
 from repro.kernels import mla_decode as _mla
 
 DEFAULT_PAGE_SIZE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """Storage layout of a paged latent pool: dtype + scale granularity.
+
+    The one object the serving stack threads from ``launch/serve.py
+    --kv-dtype`` down to the kernels.  ``dtype`` is the page-pool storage
+    dtype; ``int8`` pools are symmetric-quantized and carry a companion
+    FP32 scale pool of one scale per **page row** (``scale_granularity ==
+    "row"``) that every read path dequantizes against.  Per-row scales are
+    the only granularity with exact write-once semantics on a paged cache:
+    appends only ever touch fresh rows, so no stored row is ever
+    re-quantized (a per-page scale would re-round every earlier row of a
+    partial page on each decode append).  Coarser groupings (fp8 blocks,
+    per-page) plug in here as new granularities with their own pools.
+    """
+
+    dtype: object = jnp.bfloat16
+    scale_granularity: str = "row"
+
+    _NAMES = {"bf16": jnp.bfloat16, "int8": jnp.int8, "f32": jnp.float32}
+
+    def __post_init__(self):
+        if isinstance(self.dtype, str):
+            # Normalize name strings eagerly: jnp.zeros(..., "int8") would
+            # happily build an int8 pool that `quantized` (an identity
+            # check against jnp.int8) does not recognize — and the write
+            # path would then cast latent rows to int8 with no scales.
+            if self.dtype not in self._NAMES:
+                raise ValueError(
+                    f"unknown cache dtype {self.dtype!r}; choose from "
+                    f"{sorted(self._NAMES)}"
+                )
+            object.__setattr__(self, "dtype", self._NAMES[self.dtype])
+        if self.scale_granularity != "row":
+            raise NotImplementedError(
+                f"scale_granularity={self.scale_granularity!r}: only 'row' "
+                f"(one fp32 scale per page row) is implemented — it is the "
+                f"only granularity that never re-quantizes stored rows on "
+                f"append; add a new pool layout here for grouped scales"
+            )
+
+    @classmethod
+    def from_name(cls, name: str) -> "CacheSpec":
+        """Build from a CLI-friendly dtype name (``bf16`` / ``int8``)."""
+        if not isinstance(name, str):
+            raise TypeError(f"from_name takes a dtype name string, got {name!r}")
+        return cls(dtype=name)
+
+    @property
+    def quantized(self) -> bool:
+        return self.dtype == jnp.int8
+
+    def bytes_per_row(self, width: int) -> int:
+        """HBM bytes one latent row costs, scales included."""
+        n = width * jnp.dtype(self.dtype).itemsize
+        return n + (4 if self.quantized else 0)
+
+    def bytes_per_page(self, page_size: int, width: int) -> int:
+        """HBM bytes one page DMA moves (data strip + scale strip)."""
+        return page_size * self.bytes_per_row(width)
 
 
 def clamp_tail_pages(
@@ -142,6 +217,10 @@ def _mla_decode_paged_kernel(
     @pl.when(start < k_len)
     def _compute():
         c_blk = page_ref[...]
+        if c_blk.dtype != q_ref.dtype:
+            # fp32 compute over bf16 pages: cast one page here, in VMEM —
+            # never the whole pool (see ops.mla_decode_paged).
+            c_blk = c_blk.astype(q_ref.dtype)
         s = jax.lax.dot_general(
             q_ref[...],
             c_blk,
@@ -268,29 +347,32 @@ def _mla_decode_queue_kernel(
     ifst_ref,  # (N,) int32 1 on a dest's first item
     ilst_ref,  # (N,) int32 1 on a dest's last item
     ivld_ref,  # (N,) int32 0 for queue padding
-    # inputs
+    # inputs: q_ref, pages_hbm[, scales_hbm], then outputs and scratch —
+    # the quantized variant splices the scale pool input and its staging
+    # scratch in, so the tail is unpacked by arity below.
     q_ref,  # (G, Dk) bf16 (block selected by item_req)
     pages_hbm,  # (P, page_size, Dk) page pool, resident in HBM (ANY)
-    # outputs (blocks selected by item_dest)
-    o_ref,  # (G, Dv) f32 normalized partial output of this dest slot
-    lse_ref,  # (G, 1) f32 log-sum-exp of this dest slot
-    # scratch
-    acc_ref,
-    m_ref,
-    l_ref,
-    n_ref,
-    gamma_ref,
-    s16_ref,
-    kv_blk_ref,  # (2, block_k, Dk) double-buffered VMEM staging
-    sem,  # DMA semaphores, one per page of the block
-    *,
+    *rest,
     scale: float,
     d_v: int,
     variant: str,
     page_size: int,
     block_k: int,
     softcap: float | None,
+    quantized: bool,
 ):
+    if quantized:
+        # scales_hbm: (P, page_size) f32 per-row dequant scales (ANY);
+        # scale_blk_ref: (2, 1, block_k) f32 double-buffered staging;
+        # scale_sem: one DMA semaphore per page of the block.
+        (scales_hbm, o_ref, lse_ref, acc_ref, m_ref, l_ref, n_ref,
+         gamma_ref, s16_ref, kv_blk_ref, sem, scale_blk_ref,
+         scale_sem) = rest
+    else:
+        (o_ref, lse_ref, acc_ref, m_ref, l_ref, n_ref, gamma_ref,
+         s16_ref, kv_blk_ref, sem) = rest
+        scales_hbm = scale_blk_ref = scale_sem = None
+
     t = pl.program_id(0)
     req = ireq_ref[t]
     blk = iblk_ref[t]
@@ -320,6 +402,7 @@ def _mla_decode_queue_kernel(
     @pl.when(valid == 1)
     def _compute():
         kv_view = kv_blk_ref.at[cur]
+        scale_view = None if scale_blk_ref is None else scale_blk_ref.at[cur]
 
         def live(j):
             return start + j * page_size < k_len
@@ -329,20 +412,38 @@ def _mla_decode_queue_kernel(
             # row, so the gather never reads a padding entry.
             return pages_hbm.at[bt_ref[req, first_page + j]]
 
+        def scale_src(j):
+            return scales_hbm.at[
+                pl.ds(bt_ref[req, first_page + j], 1), :
+            ]
+
         s = _mla.preload_block_scores(
             q_ref, kv_view, n_sub=n_sub, sub_k=page_size,
             src=src, live=live, sem=sem, first_prefetched=t > 0,
+            scale_view=scale_view,
+            scale_src=scale_src if quantized else None,
+            scale_sem=scale_sem,
         )
         # Cross-step lookahead: start the next work item's first-page gather
-        # now so its copy overlaps this item's state update.
+        # (and, quantized, its scale strip) now so the copies overlap this
+        # item's state update.
+        next_cond = (t + 1 < pl.num_programs(0)) & (ivld_ref[t_next] == 1)
+        next_pid = lambda: bt_ref[ireq_ref[t_next], iblk_ref[t_next] * n_sub]
         _mla.prefetch_next_first_subtile(
-            lambda: pages_hbm.at[
-                bt_ref[ireq_ref[t_next], iblk_ref[t_next] * n_sub]
-            ],
+            lambda: pages_hbm.at[next_pid()],
             kv_blk_ref.at[1 - cur],
             sem,
             sub_k=page_size,
-            cond=(t + 1 < pl.num_programs(0)) & (ivld_ref[t_next] == 1),
+            cond=next_cond,
+            scale_src0=(
+                (lambda: scales_hbm.at[pl.ds(next_pid(), 1), :])
+                if quantized
+                else None
+            ),
+            scale_view_next=(
+                None if scale_blk_ref is None else scale_blk_ref.at[1 - cur]
+            ),
+            scale_sem=scale_sem,
         )
         s = s * jnp.float32(scale)
         if softcap is not None:
@@ -358,6 +459,7 @@ def _mla_decode_queue_kernel(
             s, kv_view[...],
             acc_ref, m_ref, l_ref, n_ref, gamma_ref, s16_ref,
             d_v=d_v, variant=variant, mm_dtype=q_ref.dtype,
+            kv_scale=None if scale_view is None else scale_view[...],
         )
 
     @pl.when((last == 1) & (valid == 1))
@@ -397,6 +499,7 @@ def mla_decode_paged_queue_rows(
     item_first: jax.Array,  # (N,) int32 │ (see decode_schedule)
     item_last: jax.Array,  # (N,) int32 │
     item_valid: jax.Array,  # (N,) int32 ┘
+    kv_scales: jax.Array | None = None,  # (P, page_size) f32, int8 pools
     *,
     d_v: int = 512,
     variant: str = "amla",
@@ -414,6 +517,14 @@ def mla_decode_paged_queue_rows(
     ``mla_decode_combine.combine_split_partials`` (a no-op merge when each
     request has one split; slots of empty requests are never written and
     are masked out there).
+
+    With an int8 page pool, ``kv_scales`` is its per-row FP32 scale pool
+    (see :class:`CacheSpec`): each work item stages the block's int8 page
+    strips *and* their scale strips through the same double-buffered
+    preload pipeline, dequantizes scores per sub-tile inside the
+    DMA-overlap window, and folds the scales into the PV probabilities —
+    the AMLA state machine sees the same fp32 state either way, while the
+    page DMAs move roughly half the bytes.
     """
     b, g, d_k = q.shape
     num_pages, page_size, _ = kv_pages.shape
@@ -422,21 +533,32 @@ def mla_decode_paged_queue_rows(
             f"block_k={block_k} must be a positive multiple of "
             f"page_size={page_size}"
         )
+    quantized = kv_scales is not None
     kv_len = kv_len.astype(jnp.int32)
     block_tables = clamp_tail_pages(
         block_tables, kv_len, page_size, num_pages
     )
     n_items = item_req.shape[0]
 
+    data_specs = [
+        pl.BlockSpec((None, g, d_k), lambda t, *refs: (refs[3][t], 0, 0)),
+        pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+    ]
+    extra_scratch = []
+    if quantized:
+        # The scale pool rides along in HBM; strips are staged by explicit
+        # DMA exactly like the page data, with their own semaphores.
+        data_specs.append(pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY))
+        extra_scratch = [
+            pltpu.VMEM((2, 1, block_k), jnp.float32),
+            pltpu.SemaphoreType.DMA((block_k // page_size,)),
+        ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=9,
         # Flat 1D queue; scratch-carried state makes it sequential
         # ("arbitrary"), which is what lets one dest span several items.
         grid=(n_items,),
-        in_specs=[
-            pl.BlockSpec((None, g, d_k), lambda t, *refs: (refs[3][t], 0, 0)),
-            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
-        ],
+        in_specs=data_specs,
         out_specs=[
             pl.BlockSpec((None, g, d_v), lambda t, *refs: (refs[5][t], 0, 0)),
             pl.BlockSpec((None, g, 1), lambda t, *refs: (refs[5][t], 0, 0)),
@@ -447,7 +569,8 @@ def mla_decode_paged_queue_rows(
             # item's first page while this item is still being read.
             pltpu.VMEM((2, block_k, d_k), kv_pages.dtype),
             pltpu.SemaphoreType.DMA((block_k // page_size,)),
-        ],
+        ]
+        + extra_scratch,
     )
     kernel = functools.partial(
         _mla_decode_queue_kernel,
@@ -457,7 +580,11 @@ def mla_decode_paged_queue_rows(
         page_size=page_size,
         block_k=block_k,
         softcap=softcap,
+        quantized=quantized,
     )
+    inputs = [q, kv_pages]
+    if quantized:
+        inputs.append(kv_scales.astype(jnp.float32))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -479,8 +606,7 @@ def mla_decode_paged_queue_rows(
         item_first.astype(jnp.int32),
         item_last.astype(jnp.int32),
         item_valid.astype(jnp.int32),
-        q,
-        kv_pages,
+        *inputs,
     )
 
 
@@ -503,6 +629,7 @@ def mla_decode_paged_group_prefix(
     item_first: jax.Array,  # │ (group, shared kv_block)
     item_last: jax.Array,  # │
     item_valid: jax.Array,  # ┘
+    kv_scales: jax.Array | None = None,  # (P, page_size) f32, int8 pools
     *,
     d_v: int = 512,
     variant: str = "amla",
@@ -557,6 +684,7 @@ def mla_decode_paged_group_prefix(
         item_first,
         item_last,
         item_valid,
+        kv_scales,
         d_v=d_v,
         variant=variant,
         scale=scale,

@@ -71,11 +71,38 @@ def default_paged_block_k(page_size: int, table_width: int) -> int:
     return page_size * min(pages_per_block, max(table_width, 1))
 
 
-def _validate_paged_geometry(q, kv_pages, block_tables, kv_len, block_k):
+def _validate_paged_geometry(
+    q, kv_pages, block_tables, kv_len, block_k, kv_scales=None, scheduler="queue"
+):
     """Fail fast, with actionable messages, on geometry the Pallas kernels
     would otherwise reject deep inside a trace (or worse, read garbage)."""
     b = q.shape[0]
     num_pages, page_size, dk_pages = kv_pages.shape
+    if kv_pages.dtype == jnp.int8:
+        if kv_scales is None:
+            raise ValueError(
+                "int8 kv_pages need their per-row fp32 scale pool: pass "
+                "kv_scales (PagedKVCache.scales) — symmetric int8 rows are "
+                "meaningless without the dequant scales"
+            )
+        if scheduler != "queue":
+            raise ValueError(
+                f"scheduler={scheduler!r} does not support int8 pages; the "
+                f"fused in-pipeline dequant lives in the work-queue kernel "
+                f"(the padded (B, W) baseline stays bf16-only)"
+            )
+    if kv_scales is not None:
+        if kv_pages.dtype != jnp.int8:
+            raise ValueError(
+                f"kv_scales given but kv_pages dtype is {kv_pages.dtype} — "
+                f"scale pools accompany int8 pools only"
+            )
+        if kv_scales.shape != (num_pages, page_size):
+            raise ValueError(
+                f"kv_scales must be (num_pages={num_pages}, "
+                f"page_size={page_size}) — one fp32 scale per page row; "
+                f"got {kv_scales.shape}"
+            )
     if block_tables.ndim != 2 or block_tables.shape[0] != b:
         raise ValueError(
             f"block_tables must be (B={b}, W); got {block_tables.shape} — "
@@ -120,6 +147,7 @@ def mla_decode_paged(
     block_tables: jax.Array,  # (B, W) int32 logical -> physical page ids
     kv_len: jax.Array,  # (B,) int32 valid tokens per request
     *,
+    kv_scales: jax.Array | None = None,  # (P, page_size) f32 (int8 pools)
     d_v: int = 512,
     variant: str = "amla",
     interpret: bool = False,
@@ -166,13 +194,24 @@ def mla_decode_paged(
     across steps; with no aliasing in the batch the path degenerates to the
     plain queue (at the cost of one extra gated combine column).
 
-    ``compute_dtype`` is the kernel matmul/staging dtype; default bf16 (the
-    serving precision).  The full-model parity harness passes float32 so a
-    paged fp32 smoke model is bit-comparable with the dense fp32 path.
+    ``compute_dtype`` is the kernel matmul dtype; default bf16 (the serving
+    precision).  The full-model parity harness passes float32 so a paged
+    fp32 smoke model is bit-comparable with the dense fp32 path.  Pages are
+    staged in their storage dtype and cast **per strip inside the kernels**
+    — a compute_dtype differing from the pool dtype never materialises a
+    pool-sized copy.
+
+    ``kv_scales`` (queue scheduler only) enables the int8 storage mode: the
+    page pool holds symmetric int8 rows and ``kv_scales`` their per-row
+    fp32 scales (``runtime.kv_cache`` with ``CacheSpec(dtype=jnp.int8)``
+    maintains both).  Dequantization is fused into the preload pipeline, so
+    int8 halves page-DMA bytes at unchanged kernel structure.
     """
     b, sq, hq, dk = q.shape
     compute_dtype = jnp.bfloat16 if compute_dtype is None else compute_dtype
-    _validate_paged_geometry(q, kv_pages, block_tables, kv_len, block_k)
+    _validate_paged_geometry(
+        q, kv_pages, block_tables, kv_len, block_k, kv_scales, scheduler
+    )
     kv_len = jnp.asarray(kv_len).astype(jnp.int32)
     base = jnp.maximum(kv_len - sq, 0)
     q_pos = base[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
@@ -193,7 +232,7 @@ def mla_decode_paged(
             )
         out = _mla_paged.mla_decode_paged_rows(
             q_rows,
-            kv_pages.astype(compute_dtype),
+            kv_pages,
             block_tables,
             kv_len,
             rows_pos,
@@ -223,8 +262,6 @@ def mla_decode_paged(
             f"schedule was built for block_k={schedule.block_k}, "
             f"call requested {block_k}"
         )
-    pool = kv_pages.astype(compute_dtype)
-
     if prefix_sharing:
         ps = schedule
         if ps is None:
@@ -238,11 +275,12 @@ def mla_decode_paged(
             )
         o_suf, lse_suf = _mla_paged.mla_decode_paged_queue_rows(
             q_rows,
-            pool,
+            kv_pages,
             block_tables,
             kv_len,
             rows_pos,
             *map(jnp.asarray, ps.suffix.prefetch_arrays()),
+            kv_scales,
             d_v=d_v,
             variant=variant,
             scale=scale,
@@ -255,13 +293,14 @@ def mla_decode_paged(
         if ps.num_groups:
             o_pref, lse_pref = _mla_paged.mla_decode_paged_group_prefix(
                 q_rows,
-                pool,
+                kv_pages,
                 block_tables,
                 rows_pos,
                 jnp.asarray(ps.groups.group_member),
                 jnp.asarray(ps.groups.group_rep),
                 jnp.asarray(ps.prefix_lens, dtype=jnp.int32),
                 *map(jnp.asarray, ps.prefix.prefetch_arrays()),
+                kv_scales,
                 d_v=d_v,
                 variant=variant,
                 scale=scale,
@@ -288,11 +327,12 @@ def mla_decode_paged(
         )
     o_part, lse = _mla_paged.mla_decode_paged_queue_rows(
         q_rows,
-        pool,
+        kv_pages,
         block_tables,
         kv_len,
         rows_pos,
         *map(jnp.asarray, schedule.prefetch_arrays()),
+        kv_scales,
         d_v=d_v,
         variant=variant,
         scale=scale,

@@ -47,7 +47,11 @@ def _build_session(args, cfg, model, params):
             prefill_chunk=args.prefill_chunk,
             prefix_sharing=args.shared_prefix,
             max_batch=args.batch,
+            kv_dtype=args.kv_dtype,
         )
+    if args.kv_dtype is not None:
+        raise SystemExit("--kv-dtype needs --cache paged (dense caches "
+                         "store activations at the model dtype)")
     return ServingSession(model, params, batch_size=args.batch, max_len=args.max_len)
 
 
@@ -153,6 +157,10 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=32)
     ap.add_argument("--block-k", type=int, default=None)
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--kv-dtype", choices=("bf16", "int8"), default=None,
+                    help="paged only: latent-cache storage dtype; int8 "
+                    "halves page-DMA bytes (per-row scales, dequant fused "
+                    "into the kernel pipeline); default = model dtype")
     ap.add_argument("--shared-prefix", action="store_true",
                     help="paged only: serve a forked system-prompt family "
                     "with group-batched prefix attention")
@@ -198,7 +206,9 @@ def main(argv=None):
         print(
             f"decode schedules: {stats['rebuilds']} built, {stats['hits']} "
             f"step reuses across {work['decode_steps']} steps x "
-            f"{cfg.n_layers} layers; {work['page_dmas']} page DMAs"
+            f"{cfg.n_layers} layers; {work['page_dmas']} page DMAs "
+            f"({work['page_dma_bytes'] / 1e6:.2f} MB at "
+            f"{args.kv_dtype or 'model'} cache dtype)"
         )
 
 

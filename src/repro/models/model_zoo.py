@@ -134,9 +134,14 @@ class LanguageModel:
         return True
 
     def init_paged_cache(
-        self, params, *, num_pages, page_size=None, dtype=None
+        self, params, *, num_pages, page_size=None, dtype=None, spec=None
     ):
-        """A LayeredPagedKVCache sized for this model's latent geometry."""
+        """A LayeredPagedKVCache sized for this model's latent geometry.
+
+        ``spec`` (a :class:`~repro.kernels.mla_decode_paged.CacheSpec`)
+        selects the storage layout — e.g. int8 pages + per-row scales —
+        independently of the model's compute dtype; it wins over ``dtype``.
+        """
         del params
         from repro.kernels.mla_decode_paged import DEFAULT_PAGE_SIZE
         from repro.models import transformer
@@ -150,6 +155,7 @@ class LanguageModel:
             page_size=page_size or DEFAULT_PAGE_SIZE,
             width=m.d_latent + m.d_rope,
             dtype=dtype or self.dtype,
+            spec=spec,
         )
 
     def layer_params(self, params) -> list:

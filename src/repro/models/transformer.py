@@ -401,6 +401,9 @@ def _paged_attend(
         cache.layer_pages(layer),
         bt,
         kv_len,
+        # int8 pools carry per-row dequant scales; the queue kernel fuses
+        # the dequant into its preload pipeline (see kernels.ops).
+        kv_scales=cache.layer_scales(layer),
         d_v=cfg.mla.d_latent,
         variant=variant,
         scale=mla_scale(cfg),

@@ -38,7 +38,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.mla_decode_paged import DEFAULT_PAGE_SIZE
+from repro.kernels.mla_decode_paged import DEFAULT_PAGE_SIZE, CacheSpec
+
+__all__ = [
+    "CacheSpec",
+    "DoubleFreeError",
+    "LayeredPagedKVCache",
+    "OutOfPagesError",
+    "PagedKVCache",
+]
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -47,6 +55,41 @@ def _write_rows(pages, rows, pid, off):
     return jax.lax.dynamic_update_slice(
         pages, rows[None].astype(pages.dtype), (pid, off, 0)
     )
+
+
+def _quantize_rows(rows):
+    """Symmetric per-row int8: ``q = round(x / σ)`` with ``σ = max|row|/127``.
+
+    All-zero rows get ``σ = 1/127`` (any σ works — every element is 0);
+    rows are widened to fp32 first so bf16 inputs quantize identically to
+    their fp32 values.  Returns ``(int8 rows, fp32 scales)`` with the
+    scales shaped like ``rows`` minus the trailing width axis.
+    """
+    rows = rows.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(rows), axis=-1)
+    scl = jnp.where(amax > 0, amax, 1.0) / 127.0
+    q = jnp.clip(jnp.round(rows / scl[..., None]), -127, 127)
+    return q.astype(jnp.int8), scl
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _write_rows_quant(pages, scales, rows, pid, off):
+    """Quantize-on-write: int8 rows + per-row scales land in one call."""
+    q, s = _quantize_rows(rows)
+    pages = jax.lax.dynamic_update_slice(pages, q[None], (pid, off, 0))
+    scales = jax.lax.dynamic_update_slice(scales, s[None], (pid, off))
+    return pages, scales
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _copy_page_quant(pages, scales, dst_pid, src_pid):
+    """COW fault for a quantized pool: page data and scale row move
+    together — a copied page must stay exactly decodable."""
+    page = jax.lax.dynamic_slice_in_dim(pages, src_pid, 1, axis=0)
+    pages = jax.lax.dynamic_update_slice(pages, page, (dst_pid, 0, 0))
+    srow = jax.lax.dynamic_slice_in_dim(scales, src_pid, 1, axis=0)
+    scales = jax.lax.dynamic_update_slice(scales, srow, (dst_pid, 0))
+    return pages, scales
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -99,6 +142,61 @@ def _copy_page_layered(pages, dst_pid, src_pid):
     return jax.lax.dynamic_update_slice(pages, page, (0, dst_pid, 0, 0))
 
 
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _write_rows_layered_quant(pages, scales, rows, pid, off):
+    """All-layer quantized write: ``rows (L, n, W)`` into page ``pid``."""
+    q, s = _quantize_rows(rows)  # (L, n, W) int8, (L, n) f32
+    pages = jax.lax.dynamic_update_slice(pages, q[:, None], (0, pid, off, 0))
+    scales = jax.lax.dynamic_update_slice(scales, s[:, None], (0, pid, off))
+    return pages, scales
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _write_rows_one_layer_quant(pages, scales, rows, layer, pid, off):
+    """Quantized single-layer chunk write: ``rows (n, W)``."""
+    q, s = _quantize_rows(rows)
+    pages = jax.lax.dynamic_update_slice(
+        pages, q[None, None], (layer, pid, off, 0)
+    )
+    scales = jax.lax.dynamic_update_slice(
+        scales, s[None, None], (layer, pid, off)
+    )
+    return pages, scales
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _write_token_rows_one_layer_quant(pages, scales, rows, layer, pids, offs):
+    """Quantized decode-step scatter: one row per request, one layer."""
+    q, s = _quantize_rows(rows)  # (B, W) int8, (B,) f32
+
+    def body(i, c):
+        p, sc = c
+        p = jax.lax.dynamic_update_slice(
+            p, q[i][None, None, None], (layer, pids[i], offs[i], 0)
+        )
+        sc = jax.lax.dynamic_update_slice(
+            sc, s[i][None, None, None], (layer, pids[i], offs[i])
+        )
+        return p, sc
+
+    return jax.lax.fori_loop(0, rows.shape[0], body, (pages, scales))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _copy_page_layered_quant(pages, scales, dst_pid, src_pid):
+    """Layered COW fault, quantized: every layer's page plane *and* scale
+    row copy in the same call — one device op covers all L layers."""
+    page = jax.lax.dynamic_slice(
+        pages, (0, src_pid, 0, 0), (pages.shape[0], 1) + pages.shape[2:]
+    )
+    pages = jax.lax.dynamic_update_slice(pages, page, (0, dst_pid, 0, 0))
+    srow = jax.lax.dynamic_slice(
+        scales, (0, src_pid, 0), (scales.shape[0], 1, scales.shape[2])
+    )
+    scales = jax.lax.dynamic_update_slice(scales, srow, (0, dst_pid, 0))
+    return pages, scales
+
+
 class OutOfPagesError(RuntimeError):
     """Raised when an append needs more pages than the pool has free."""
 
@@ -115,7 +213,15 @@ class PagedKVCache:
     num_pages:  total pages in the device pool.
     page_size:  latent rows per page.
     width:      row width (576 = 512 latent + 64 rope for DeepSeek MLA).
-    dtype:      storage dtype of the pool (bf16 in serving).
+    dtype:      storage dtype of the pool (bf16 in serving).  ``jnp.int8``
+                selects the quantized mode: rows are symmetric-quantized
+                on write against a companion per-row fp32 scale pool
+                (:attr:`scales`), and every read path — the fused kernels,
+                COW copies, :meth:`gather_contiguous` — carries the scales
+                along.  Page bookkeeping (refcounts, fork, free) is
+                storage-dtype-blind.
+    spec:       full :class:`~repro.kernels.mla_decode_paged.CacheSpec`
+                (dtype + scale granularity); overrides ``dtype``.
     debug:      when True, misuse that is silently tolerated in production
                 (double-free) raises instead.
     """
@@ -127,6 +233,7 @@ class PagedKVCache:
         page_size: int = DEFAULT_PAGE_SIZE,
         width: int = 576,
         dtype=jnp.bfloat16,
+        spec: CacheSpec | None = None,
         debug: bool = False,
     ):
         if num_pages < 1 or page_size < 1:
@@ -134,9 +241,11 @@ class PagedKVCache:
         self.num_pages = num_pages
         self.page_size = page_size
         self.width = width
-        self.dtype = dtype
+        self.spec = spec if spec is not None else CacheSpec(dtype=dtype)
+        self.dtype = self.spec.dtype
         self.debug = debug
         self.pages = self._make_pool()
+        self.scales = self._make_scale_pool() if self.quantized else None
         # FIFO free list: freed pages are reused in release order, so a
         # long-lived session naturally produces fragmented (non-contiguous,
         # non-monotone) block tables — which the kernel must not care about.
@@ -150,6 +259,11 @@ class PagedKVCache:
     # ------------------------------------------------------------------ #
     # bookkeeping
     # ------------------------------------------------------------------ #
+    @property
+    def quantized(self) -> bool:
+        """True when the pool stores int8 rows + a per-row scale pool."""
+        return self.spec.quantized
+
     @property
     def num_free_pages(self) -> int:
         return len(self._free)
@@ -269,9 +383,20 @@ class PagedKVCache:
         """Allocate the device page pool (layered subclasses override)."""
         return jnp.zeros((self.num_pages, self.page_size, self.width), self.dtype)
 
+    def _make_scale_pool(self) -> jax.Array:
+        """Per-page-row fp32 dequant scales (quantized pools only)."""
+        return jnp.zeros((self.num_pages, self.page_size), jnp.float32)
+
     def _pool_copy_page(self, dst_pid: int, src_pid: int) -> None:
         """Device-side page copy (the COW fault path)."""
-        self.pages = _copy_page(self.pages, jnp.int32(dst_pid), jnp.int32(src_pid))
+        if self.quantized:
+            self.pages, self.scales = _copy_page_quant(
+                self.pages, self.scales, jnp.int32(dst_pid), jnp.int32(src_pid)
+            )
+        else:
+            self.pages = _copy_page(
+                self.pages, jnp.int32(dst_pid), jnp.int32(src_pid)
+            )
 
     def _pool_write(self, pid: int, off: int, rows: jax.Array) -> None:
         """Device-side row write into one page."""
@@ -279,7 +404,14 @@ class PagedKVCache:
         # write, not an O(pool) copy.  Indices are traced scalars, so
         # only distinct chunk lengths ``m`` trigger a retrace (decode
         # appends are always m == 1).
-        self.pages = _write_rows(self.pages, rows, jnp.int32(pid), jnp.int32(off))
+        if self.quantized:
+            self.pages, self.scales = _write_rows_quant(
+                self.pages, self.scales, rows, jnp.int32(pid), jnp.int32(off)
+            )
+        else:
+            self.pages = _write_rows(
+                self.pages, rows, jnp.int32(pid), jnp.int32(off)
+            )
 
     def reserve(self, rid: int, n: int) -> list[tuple[int, int, int]]:
         """Bookkeeping half of an append: claim room for ``n`` more rows.
@@ -331,8 +463,15 @@ class PagedKVCache:
             self._pool_write(pid, in_page, rows[off : off + m])
             off += m
 
+    @property
+    def _row_dtype(self):
+        """Dtype appended rows are coerced to.  A quantized pool takes
+        *unquantized* fp32 rows — quantization happens in the write hook
+        (casting caller rows to int8 here would silently destroy them)."""
+        return jnp.float32 if self.quantized else self.pages.dtype
+
     def _validate_rows(self, rows) -> jax.Array:
-        rows = jnp.asarray(rows, self.pages.dtype)
+        rows = jnp.asarray(rows, self._row_dtype)
         if rows.ndim != 2 or rows.shape[1] != self.width:
             raise ValueError(f"rows must be (n, {self.width}); got {rows.shape}")
         return rows
@@ -371,11 +510,19 @@ class PagedKVCache:
         """Reassemble ``rid``'s rows as a contiguous (len, width) array.
 
         Debug/test helper — the serving path never materialises this.
+        Quantized pools dequantize (int8 × per-row scale → fp32).
         """
         n = self._seq_len[rid]
         if n == 0:
-            return jnp.zeros((0, self.width), self.pages.dtype)
-        parts = [self.pages[pid] for pid in self._seq_pages[rid]]
+            return jnp.zeros((0, self.width), self._row_dtype)
+        if self.quantized:
+            parts = [
+                self.pages[pid].astype(jnp.float32)
+                * self.scales[pid][:, None]
+                for pid in self._seq_pages[rid]
+            ]
+        else:
+            parts = [self.pages[pid] for pid in self._seq_pages[rid]]
         return jnp.concatenate(parts, axis=0)[:n]
 
 
@@ -409,6 +556,7 @@ class LayeredPagedKVCache(PagedKVCache):
         page_size: int = DEFAULT_PAGE_SIZE,
         width: int = 576,
         dtype=jnp.bfloat16,
+        spec: CacheSpec | None = None,
         debug: bool = False,
     ):
         if num_layers < 1:
@@ -419,6 +567,7 @@ class LayeredPagedKVCache(PagedKVCache):
             page_size=page_size,
             width=width,
             dtype=dtype,
+            spec=spec,
             debug=debug,
         )
 
@@ -429,20 +578,38 @@ class LayeredPagedKVCache(PagedKVCache):
             self.dtype,
         )
 
-    def _pool_copy_page(self, dst_pid: int, src_pid: int) -> None:
-        # One COW fault copies the page across every layer in one op.
-        self.pages = _copy_page_layered(
-            self.pages, jnp.int32(dst_pid), jnp.int32(src_pid)
+    def _make_scale_pool(self) -> jax.Array:
+        # Scales carry the layer axis too: every layer's latent rows are
+        # quantized independently against their own row maxima.
+        return jnp.zeros(
+            (self.num_layers, self.num_pages, self.page_size), jnp.float32
         )
+
+    def _pool_copy_page(self, dst_pid: int, src_pid: int) -> None:
+        # One COW fault copies the page across every layer in one op —
+        # quantized pools move the scale rows in the same call.
+        if self.quantized:
+            self.pages, self.scales = _copy_page_layered_quant(
+                self.pages, self.scales, jnp.int32(dst_pid), jnp.int32(src_pid)
+            )
+        else:
+            self.pages = _copy_page_layered(
+                self.pages, jnp.int32(dst_pid), jnp.int32(src_pid)
+            )
 
     def _pool_write(self, pid: int, off: int, rows: jax.Array) -> None:
         # rows (L, m, W): all-layer write (the one-shot append path).
-        self.pages = _write_rows_layered(
-            self.pages, rows, jnp.int32(pid), jnp.int32(off)
-        )
+        if self.quantized:
+            self.pages, self.scales = _write_rows_layered_quant(
+                self.pages, self.scales, rows, jnp.int32(pid), jnp.int32(off)
+            )
+        else:
+            self.pages = _write_rows_layered(
+                self.pages, rows, jnp.int32(pid), jnp.int32(off)
+            )
 
     def _validate_rows(self, rows) -> jax.Array:
-        rows = jnp.asarray(rows, self.pages.dtype)
+        rows = jnp.asarray(rows, self._row_dtype)
         want = (self.num_layers, self.width)
         if rows.ndim != 3 or (rows.shape[0], rows.shape[2]) != want:
             raise ValueError(
@@ -469,16 +636,26 @@ class LayeredPagedKVCache(PagedKVCache):
         The chunked-prefill write: :meth:`reserve` once per chunk of
         tokens, then every layer writes its latents into the same chunks.
         """
-        rows = jnp.asarray(rows, self.pages.dtype)
+        rows = jnp.asarray(rows, self._row_dtype)
         off = 0
         for pid, in_page, m in chunks:
-            self.pages = _write_rows_one_layer(
-                self.pages,
-                rows[off : off + m],
-                jnp.int32(layer),
-                jnp.int32(pid),
-                jnp.int32(in_page),
-            )
+            if self.quantized:
+                self.pages, self.scales = _write_rows_one_layer_quant(
+                    self.pages,
+                    self.scales,
+                    rows[off : off + m],
+                    jnp.int32(layer),
+                    jnp.int32(pid),
+                    jnp.int32(in_page),
+                )
+            else:
+                self.pages = _write_rows_one_layer(
+                    self.pages,
+                    rows[off : off + m],
+                    jnp.int32(layer),
+                    jnp.int32(pid),
+                    jnp.int32(in_page),
+                )
             off += m
 
     def write_layer_tokens(self, layer: int, pids, offs, rows) -> None:
@@ -486,21 +663,31 @@ class LayeredPagedKVCache(PagedKVCache):
         at ``(layer, pids[i], offs[i])`` — the decode-step append, batched
         into a single donated device call per layer.
         """
-        self.pages = _write_token_rows_one_layer(
-            self.pages,
-            jnp.asarray(rows, self.pages.dtype),
-            jnp.int32(layer),
-            jnp.asarray(pids, jnp.int32),
-            jnp.asarray(offs, jnp.int32),
-        )
+        rows = jnp.asarray(rows, self._row_dtype)
+        pids = jnp.asarray(pids, jnp.int32)
+        offs = jnp.asarray(offs, jnp.int32)
+        if self.quantized:
+            self.pages, self.scales = _write_token_rows_one_layer_quant(
+                self.pages, self.scales, rows, jnp.int32(layer), pids, offs
+            )
+        else:
+            self.pages = _write_token_rows_one_layer(
+                self.pages, rows, jnp.int32(layer), pids, offs
+            )
 
     def layer_pages(self, layer: int) -> jax.Array:
         """The ``(num_pages, page_size, width)`` pool of one layer."""
         return self.pages[layer]
 
+    def layer_scales(self, layer: int) -> jax.Array | None:
+        """One layer's ``(num_pages, page_size)`` scale pool (None unless
+        quantized) — passed to the kernels alongside :meth:`layer_pages`."""
+        return None if self.scales is None else self.scales[layer]
+
     def gather_contiguous(self, rid: int, layer: int | None = None) -> jax.Array:
         """Contiguous ``(len, width)`` rows of one layer (or ``(L, len,
-        width)`` for all layers when ``layer`` is None).  Test helper."""
+        width)`` for all layers when ``layer`` is None).  Test helper;
+        quantized pools dequantize."""
         n = self._seq_len[rid]
         if n == 0:
             shape = (
@@ -508,10 +695,17 @@ class LayeredPagedKVCache(PagedKVCache):
                 if layer is None
                 else (0, self.width)
             )
-            return jnp.zeros(shape, self.pages.dtype)
+            return jnp.zeros(shape, self._row_dtype)
         axis = 1 if layer is None else 0
         sel = self.pages if layer is None else self.pages[layer]
         parts = [sel[:, pid] if layer is None else sel[pid]
                  for pid in self._seq_pages[rid]]
         out = jnp.concatenate(parts, axis=axis)
+        if self.quantized:
+            ssel = self.scales if layer is None else self.scales[layer]
+            sparts = [ssel[:, pid] if layer is None else ssel[pid]
+                      for pid in self._seq_pages[rid]]
+            out = out.astype(jnp.float32) * jnp.concatenate(sparts, axis=axis)[
+                ..., None
+            ]
         return out[:, :n] if layer is None else out[:n]

@@ -202,7 +202,11 @@ class PagedServingSession:
       layers (every layer shares the block table), and the memoizing
       :class:`~repro.kernels.decode_schedule.DecodeScheduler` reuses it
       across steps — :attr:`scheduler_stats` counts steps, not ``L x
-      steps``.
+      steps``;
+    * the cache storage dtype is a serving knob (``kv_dtype="int8"``):
+      quantized pools halve page-DMA bytes with dequant fused into the
+      kernel pipeline, and :meth:`work_stats` reports the dtype-aware
+      ``page_dma_bytes`` proxy.
     """
 
     def __init__(
@@ -220,18 +224,31 @@ class PagedServingSession:
         max_batch: int | None = None,
         interpret: bool | None = None,
         dtype=None,
+        kv_dtype=None,
     ):
         from repro.kernels import ops
         from repro.kernels.decode_schedule import DecodeScheduler
         from repro.models import transformer as _tf
+        from repro.runtime.kv_cache import CacheSpec
 
         _tf.check_paged_compatible(model.cfg)
         self.model = model
         self.params = params
         self.cfg = model.cfg
+        # ``dtype`` is the serving compute precision (defaults to the
+        # model's); ``kv_dtype`` is the cache *storage* layout — "int8"
+        # stores quantized latent pages + per-row scales at roughly half
+        # the page-DMA bytes, dequantized inside the kernel pipeline.
         self.dtype = dtype or model.dtype
+        self.cache_spec = (
+            kv_dtype
+            if isinstance(kv_dtype, CacheSpec)
+            # CacheSpec normalizes dtype-name strings ("int8") itself.
+            else CacheSpec(dtype=self.dtype if kv_dtype is None else kv_dtype)
+        )
         self.cache = model.init_paged_cache(
-            params, num_pages=num_pages, page_size=page_size, dtype=self.dtype
+            params, num_pages=num_pages, page_size=page_size,
+            spec=self.cache_spec,
         )
         # Fixed block-table width: stable kernel input shapes across
         # admits/evicts and page-boundary growth (see PagedDecodeSession).
@@ -288,10 +305,19 @@ class PagedServingSession:
         return len(self._decode_shapes)
 
     def work_stats(self) -> dict:
-        """Deterministic decode-work proxies accumulated across steps."""
+        """Deterministic decode-work proxies accumulated across steps.
+
+        ``page_dma_bytes`` is the dtype-aware traffic proxy: page DMAs
+        times the storage bytes one page moves (int8 pages include their
+        fp32 scale strip) — the number the cache-dtype choice actually
+        changes, where the raw DMA *count* does not.
+        """
         return {
             "decode_steps": self.decode_steps,
             "page_dmas": self.page_dmas,
+            "page_dma_bytes": self.page_dmas * self.cache_spec.bytes_per_page(
+                self.cache.page_size, self.cache.width
+            ),
             "rows_attended": self.rows_attended,
             "aliased_pages": self.cache.num_aliased_pages(),
             "free_pages": self.cache.num_free_pages,
@@ -493,6 +519,7 @@ class PagedDecodeSession:
         variant: str = "amla",
         interpret: bool = False,
         dtype=jnp.bfloat16,
+        cache_spec=None,
         scheduler: str = "queue",
         num_splits: int = 1,
         block_k: int | None = None,
@@ -504,12 +531,20 @@ class PagedDecodeSession:
         from repro.kernels.mla_decode_paged import DEFAULT_PAGE_SIZE
         from repro.runtime.kv_cache import PagedKVCache
 
+        # cache_spec selects the storage layout (e.g. int8 + per-row
+        # scales, which needs the queue scheduler's fused dequant).
         self.kv = PagedKVCache(
             num_pages=num_pages,
             page_size=page_size or DEFAULT_PAGE_SIZE,
             width=d_k,
             dtype=dtype,
+            spec=cache_spec,
         )
+        if self.kv.quantized and scheduler != "queue":
+            raise ValueError(
+                "int8 cache_spec needs scheduler='queue' (the padded grid "
+                "has no fused dequant path)"
+            )
         self.d_k, self.d_v = d_k, d_v
         self.scale, self.variant, self.interpret = scale, variant, interpret
         # Fixed block-table width keeps the jit'd kernel's input shapes
@@ -647,6 +682,7 @@ class PagedDecodeSession:
             self.kv.pages,
             jnp.asarray(bt),
             jnp.asarray(kv_len),
+            kv_scales=self.kv.scales,
             d_v=self.d_v,
             variant=self.variant,
             scale=self.scale,

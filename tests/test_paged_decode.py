@@ -7,6 +7,7 @@ fragmented (shuffled) block tables.  Acceptance bound: max |paged − contig|
 <= 2e-3 in FP32 for both variants.
 """
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -303,6 +304,62 @@ def test_paged_session_step_append_is_atomic():
     sess.evict(r2)
     out = sess.step({r1: q[r1]}, {r1: one(1)[0]})
     assert sess.kv.seq_len(r1) == 5 and set(out) == {r1}
+
+
+def _convert_shapes(jaxpr, acc):
+    """All convert_element_type output shapes, walking nested jaxprs."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "convert_element_type":
+            acc.append(tuple(eqn.outvars[0].aval.shape))
+        for v in eqn.params.values():
+            inner = getattr(v, "jaxpr", None)
+            if inner is not None:
+                _convert_shapes(inner, acc)
+            elif isinstance(v, (list, tuple)):
+                for w in v:
+                    if getattr(w, "jaxpr", None) is not None:
+                        _convert_shapes(w.jaxpr, acc)
+    return acc
+
+
+@pytest.mark.parametrize("scheduler", ["queue", "padded"])
+def test_fp32_compute_dtype_has_no_pool_sized_cast(scheduler):
+    """Satellite fix: compute_dtype=float32 over a bf16 pool must not
+    materialise an O(pool) `pool.astype(f32)` copy on every decode call —
+    the kernels cast per staged strip instead.  Pinned on the traced jaxpr:
+    no convert_element_type anywhere may produce a pool-shaped array."""
+    from repro.kernels.decode_schedule import build_schedule
+
+    b, hq, dk, dv, page = 2, 4, 128, 64, 32
+    kv_lens = [96, 64]
+    q = jnp.asarray(bf16ish((b, 1, hq, dk), 50), jnp.float32)
+    c = bf16ish((b, max(kv_lens), dk), 51)
+    pool, bt = paginate(c, kv_lens, page, num_pages=6)
+    pool = pool.astype(jnp.bfloat16)
+    schedule = build_schedule(kv_lens, block_k=page * 2)
+
+    def f(q, pool, bt, kv_len):
+        return ops.mla_decode_paged(
+            q, pool, bt, kv_len, d_v=dv, scale=0.1, scheduler=scheduler,
+            block_k=page * 2 if scheduler == "queue" else None,
+            schedule=schedule if scheduler == "queue" else None,
+            compute_dtype=jnp.float32, **INTERP,
+        )
+
+    kv_len = jnp.asarray(kv_lens, jnp.int32)
+    jaxpr = jax.make_jaxpr(f)(q, pool, bt, kv_len)
+    shapes = _convert_shapes(jaxpr.jaxpr, [])
+    assert tuple(pool.shape) not in shapes, (
+        f"pool-sized convert_element_type found: {pool.shape}"
+    )
+    # and the fp32 path still matches the bf16-compute result closely
+    out32 = f(q, pool, bt, kv_len)
+    out16 = ops.mla_decode_paged(
+        q, pool, bt, kv_len, d_v=dv, scale=0.1, scheduler=scheduler,
+        block_k=page * 2 if scheduler == "queue" else None,
+        schedule=schedule if scheduler == "queue" else None, **INTERP,
+    )
+    assert float(jnp.max(jnp.abs(out32 - out16))) <= PARITY_ATOL
 
 
 def test_paged_session_rejects_dead_rids():
