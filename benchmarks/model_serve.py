@@ -31,7 +31,11 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models.model_zoo import build_model
-from repro.runtime.serve_loop import PagedServingSession, ServingSession
+from repro.runtime.serve_loop import (
+    PagedServingSession,
+    ServingSession,
+    ShardedPagedServingSession,
+)
 
 
 def _on_tpu() -> bool:
@@ -79,8 +83,11 @@ def _timed_steps(sess, n: int) -> float:
     t0 = time.perf_counter()
     for _ in range(n):
         sess.step()
-    jax.block_until_ready(getattr(sess, "cache").pages
-                          if hasattr(sess.cache, "pages") else 0)
+    cache = getattr(sess, "cache", None)
+    if cache is not None and hasattr(cache, "pages"):
+        jax.block_until_ready(cache.pages)
+    elif hasattr(sess, "shards"):  # sharded: one pool per data shard
+        jax.block_until_ready([s.cache.pages for s in sess.shards])
     return time.perf_counter() - t0
 
 
@@ -146,6 +153,59 @@ def _serve_scenario(cfg, model, params, g, *, shared_prefix: bool) -> dict:
     }
 
 
+def _sharded_scenario(cfg, model, params, g, *, shards: int = 2) -> dict:
+    """Sharded-vs-single-host row: the same ragged request stream served
+    through one paged session and a :class:`ShardedPagedServingSession`
+    with the pool + work queue split over ``shards`` data shards.
+
+    Logical shards (mesh=None) keep this runnable on single-device CI; the
+    CPU-mesh job drives the same class over real devices.  Gates: greedy
+    outputs must match the single-host backend exactly
+    (``greedy_match_vs_single == 1.0`` — routing is data-parallel, so each
+    request's kernel math is shard-local and bit-identical), and the
+    per-shard page-DMA work split must stay balanced
+    (``shard_imbalance = max/mean <= 2.0`` on this ragged stream).
+    """
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(2, cfg.vocab_size, size=n).tolist() for n in g["prompts"]
+    ]
+    single = PagedServingSession(
+        model, params, num_pages=g["num_pages"], page_size=g["page"],
+        block_k=g["block_k"], prefill_chunk=g["chunk"],
+    )
+    sharded = ShardedPagedServingSession(
+        model, params, num_pages=g["num_pages"], shards=shards,
+        page_size=g["page"], block_k=g["block_k"], prefill_chunk=g["chunk"],
+    )
+    r_single = [single.add_request(p) for p in prompts]
+    r_sharded = [sharded.add_request(p) for p in prompts]
+    dt_single = _timed_steps(single, g["steps"])
+    dt_sharded = _timed_steps(sharded, g["steps"])
+    outs_single = [single.outputs[r] for r in r_single]
+    outs_sharded = [sharded.outputs[r] for r in r_sharded]
+    matches = sum(a == b for a, b in zip(outs_single, outs_sharded))
+    toks = len(prompts) * g["steps"]
+    work = sharded.work_stats()
+    bal = work["balance"]
+    res = {
+        "requests": len(prompts),
+        "num_shards": shards,
+        "decode_steps": work["decode_steps"],
+        "tokens_per_s_paged": toks / max(dt_sharded, 1e-9),
+        "tokens_per_s_single_host": toks / max(dt_single, 1e-9),
+        "page_dmas_paged": work["page_dmas"],
+        "page_dma_bytes_paged": work["page_dma_bytes"],
+        "schedule_rebuilds": sharded.scheduler_stats["rebuilds"],
+        "greedy_match_vs_single": matches / len(prompts),
+        "shard_imbalance": bal["imbalance"],
+    }
+    for i, st in enumerate(work["per_shard"]):
+        res[f"shard{i}_page_dmas"] = st["page_dmas"]
+        res[f"shard{i}_rows_attended"] = st["rows_attended"]
+    return res
+
+
 def _dtype_scenario(cfg, model, params, g) -> dict:
     """Int8-vs-bf16 cache-dtype row: the same ragged request stream served
     through two paged sessions that differ only in kv_dtype.
@@ -200,6 +260,11 @@ def run(full: bool = False, smoke: bool = False) -> dict:
         for k, v in sorted(res.items()):
             val = f"{v:.1f}" if isinstance(v, float) else v
             print(f"model_serve,{name},{k},{val}")
+    sh = _sharded_scenario(cfg, model, params, g)
+    report["scenarios"]["sharded"] = sh
+    for k, v in sorted(sh.items()):
+        val = f"{v:.2f}" if isinstance(v, float) else v
+        print(f"model_serve,sharded,{k},{val}")
     res = _dtype_scenario(cfg, model, params, g)
     report["scenarios"]["int8_vs_bf16"] = res
     for k, v in sorted(res.items()):
@@ -219,6 +284,14 @@ def run(full: bool = False, smoke: bool = False) -> dict:
         f"model_serve,acceptance_int8,dma_bytes_reduction,"
         f"{res['dma_bytes_reduction_vs_bf16']:.2f},greedy_match,"
         f"{res['greedy_match_vs_bf16']:.2f},pass,{int(int8_ok)}"
+    )
+    sharded_ok = (
+        sh["greedy_match_vs_single"] == 1.0 and sh["shard_imbalance"] <= 2.0
+    )
+    print(
+        f"model_serve,acceptance_sharded,greedy_match,"
+        f"{sh['greedy_match_vs_single']:.2f},shard_imbalance,"
+        f"{sh['shard_imbalance']:.2f},pass,{int(sharded_ok)}"
     )
     return report
 

@@ -114,6 +114,8 @@ def _summarize(report: dict) -> dict:
                 "dma_bytes_reduction_vs_bf16",
                 "greedy_match_vs_bf16",
                 "read_reduction_vs_dense",
+                "greedy_match_vs_single",
+                "shard_imbalance",
             ))
     return out
 
@@ -226,14 +228,26 @@ def check_regression(report: dict, baseline_path: str, tol: float) -> list:
         ("model_serve", "dma_bytes_reduction_vs_bf16", False, not on_tpu),
         ("model_serve", "schedule_rebuilds", True, not on_tpu),
         ("model_serve", "read_reduction_vs_dense", False, not on_tpu),
+        # [MODEL-SERVE] sharded row: exact greedy parity with the
+        # single-host backend and the max/mean shard work split are both
+        # deterministic, so they gate in CI like the other work proxies.
+        ("model_serve", "greedy_match_vs_single", False, not on_tpu),
+        ("model_serve", "shard_imbalance", True, not on_tpu),
     ]
     for section_key, metric, lower_better, gated in checks:
         for name, res in report.get(section_key, {}).items():
             ref = base.get(section_key, {}).get(name, {}).get(metric)
-            if not ref or metric not in res:
+            if ref is None or metric not in res:
                 continue
             now = res[metric]
-            drop = (now - ref) / ref if lower_better else (ref - now) / ref
+            if ref == 0:
+                # A zero baseline is a real reference (e.g. a work proxy
+                # that must stay at zero), not a missing one: no ratio
+                # exists, so require equal-or-better outright.
+                worse = now > 0 if lower_better else now < 0
+                drop = float("inf") if worse else 0.0
+            else:
+                drop = (now - ref) / ref if lower_better else (ref - now) / ref
             bad = gated and drop > tol
             status = "fail" if bad else ("ok" if gated else "info")
             print(

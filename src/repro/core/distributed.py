@@ -45,6 +45,37 @@ def combine_partials(acc, m, l):
     return jnp.where(den[:, None] > 0, num / safe[:, None], 0.0)
 
 
+def combine_shard_partials(o_parts, lse_parts):
+    """Merge *normalized* per-shard partials, the paged-queue kernel's format.
+
+    The paged decode queue (``mla_decode_paged_queue_rows``) emits partials
+    as normalized outputs plus log-sum-exp — ``o_i = acc_i / l_i`` with
+    ``lse_i = m_i + log(l_i)`` — which is also what ``mla_decode_combine``
+    consumes within a host.  Across hosts the same merge applies:
+
+        M = max_s lse_s
+        O = sum_s exp(lse_s - M) * o_s  /  sum_s exp(lse_s - M)
+
+    o_parts: (S, ..., Dv), lse_parts: (S, ...) with BIG_NEG (~-3e38) marking
+    shards that saw no valid keys -> (..., Dv).  Exactness note: for the
+    same KV partition this reproduces the combine kernel's arithmetic, so a
+    request split across shards merges to the single-host answer up to fp
+    reassociation of the final reduce.
+    """
+    o_parts = jnp.asarray(o_parts, jnp.float32)
+    lse_parts = jnp.asarray(lse_parts, jnp.float32)
+    m_star = jnp.max(lse_parts, axis=0)
+    w = jnp.exp(lse_parts - m_star[None])  # empty shards -> exp(BIG_NEG) = 0
+    # The max-shift makes BIG_NEG weigh exp(0)=1 when EVERY shard is empty;
+    # mask on the raw lse so an all-empty row zeroes instead of averaging
+    # whatever payload empty shards carry.
+    w = jnp.where(lse_parts > jnp.float32(-1.0e38), w, 0.0)
+    num = jnp.sum(o_parts * w[..., None], axis=0)
+    den = jnp.sum(w, axis=0)
+    safe = jnp.where(den > 0, den, 1.0)
+    return jnp.where(den[..., None] > 0, num / safe[..., None], 0.0)
+
+
 def seq_parallel_decode(
     q: jax.Array,  # (G, Dk) replicated decode queries (one kv-head group)
     k: jax.Array,  # (S_total, Dk) sharded along axis_name

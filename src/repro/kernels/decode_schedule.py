@@ -616,3 +616,51 @@ def prefix_queue_grid_items(
         "num_groups": ps.num_groups,
         "grouped_requests": int(np.sum(ps.groups.group_of_req >= 0)),
     }
+
+
+# --------------------------------------------------------------------------- #
+# sharded-serving routing (data-parallel page pools)
+# --------------------------------------------------------------------------- #
+
+
+def route_request(shard_live_blocks, shard_free_pages, pages_needed: int):
+    """Pick the data shard to admit a new request onto.
+
+    ``shard_live_blocks[i]`` is shard i's current decode work proxy (sum of
+    live §4.2 KV blocks across its requests — one queue item each per decode
+    step), ``shard_free_pages[i]`` its free pool pages.  Among shards that
+    can hold ``pages_needed`` pages, pick the least-loaded by live block
+    count; break ties toward more free pages, then the lowest index (so
+    an empty fleet fills deterministically shard 0, 1, ...).
+
+    Returns the shard index, or None when no shard has room (caller evicts
+    or defers).
+    """
+    best = None
+    for i, (blocks, free) in enumerate(zip(shard_live_blocks, shard_free_pages)):
+        if free < pages_needed:
+            continue
+        key = (int(blocks), -int(free), i)
+        if best is None or key < best[0]:
+            best = (key, i)
+    return None if best is None else best[1]
+
+
+def shard_work_balance(per_shard_items) -> dict:
+    """max/mean imbalance of a per-shard work proxy (queue items, page DMAs).
+
+    ``imbalance`` is 1.0 for a perfectly even split and rises as one shard
+    hoards the work; the sharded `[MODEL-SERVE]` row gates on <= 2.0 for
+    the ragged stream.  Empty fleets report 0.0 work and imbalance 1.0.
+    """
+    items = [float(x) for x in per_shard_items]
+    total = sum(items)
+    mean = total / len(items) if items else 0.0
+    peak = max(items) if items else 0.0
+    return {
+        "per_shard": items,
+        "total": total,
+        "max": peak,
+        "mean": mean,
+        "imbalance": (peak / mean) if mean > 0 else 1.0,
+    }

@@ -162,6 +162,7 @@ def mla_decode_paged(
     prefix_sharing: bool = False,
     min_group: int = 2,
     compute_dtype=None,
+    return_partials: bool = False,
 ) -> jax.Array:
     """MLA decode over a paged latent cache (see runtime.kv_cache).
 
@@ -206,6 +207,13 @@ def mla_decode_paged(
     fp32 scales (``runtime.kv_cache`` with ``CacheSpec(dtype=jnp.int8)``
     maintains both).  Dequantization is fused into the preload pipeline, so
     int8 halves page-DMA bytes at unchanged kernel structure.
+
+    ``return_partials=True`` (plain queue scheduler only) additionally
+    returns the per-row log-sum-exp alongside the output —
+    ``(o (B,Sq,Hq,Dv), lse (B,Sq,Hq))`` in the normalized-partial format of
+    the combine kernel — so a request whose KV is partitioned across hosts
+    can merge shard-local results exactly with
+    :func:`repro.core.distributed.combine_shard_partials`.
     """
     b, sq, hq, dk = q.shape
     compute_dtype = jnp.bfloat16 if compute_dtype is None else compute_dtype
@@ -223,6 +231,12 @@ def mla_decode_paged(
     rows_pos = jnp.repeat(q_pos, hq, axis=1)  # (B, Sq*Hq)
     q_rows = q.reshape(b, sq * hq, dk).astype(compute_dtype)
 
+    if return_partials and (scheduler != "queue" or prefix_sharing):
+        raise ValueError(
+            "return_partials needs the plain queue scheduler (padded and "
+            "prefix-sharing paths merge heterogeneous partial sets and do "
+            "not expose a per-row lse)"
+        )
     if scheduler == "padded":
         if prefix_sharing:
             raise ValueError(
@@ -263,6 +277,12 @@ def mla_decode_paged(
             f"call requested {block_k}"
         )
     if prefix_sharing:
+        if return_partials:
+            raise ValueError(
+                "return_partials needs the plain queue scheduler (padded "
+                "and prefix-sharing paths merge heterogeneous partial sets "
+                "and do not expose a per-row lse)"
+            )
         ps = schedule
         if ps is None:
             ps = _sched.build_prefix_schedule(
@@ -348,6 +368,18 @@ def mla_decode_paged(
         jnp.asarray(schedule.n_splits),
         interpret=interpret,
     )
+    if return_partials:
+        # Per-row local logsumexp across this call's split slots: dead slots
+        # carry BIG_NEG lse, so including them adds exp(BIG_NEG) = 0.
+        lse_slots = lse[..., 0] if lse.ndim == 3 else lse  # (D, G)
+        per_split = lse_slots[jnp.asarray(schedule.dest_table)]  # (B, S, G)
+        lse_rows = jax.nn.logsumexp(
+            per_split.astype(jnp.float32), axis=1
+        )  # (B, G)
+        return (
+            out.reshape(b, sq, hq, d_v),
+            lse_rows.reshape(b, sq, hq),
+        )
     return out.reshape(b, sq, hq, d_v)
 
 

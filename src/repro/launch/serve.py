@@ -25,7 +25,50 @@ serves the paper's (``deepseek-v2-mla``), while dense defaults to
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+
+def _ensure_cpu_mesh_devices(n: int) -> None:
+    """Ask XLA's host platform for ``n`` CPU devices before backends init.
+
+    Importing repro modules below initializes the jax backend (kernel
+    constants touch device state at import), so this must run from
+    ``sys.argv`` at module top — after argparse it would be too late in
+    the ``python -m repro.launch.serve`` entry path.  A pre-set XLA_FLAGS
+    carrying the option is respected (e.g. the CI job exports it).
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}"
+        ).strip()
+
+
+def _peek_mesh_devices(argv) -> None:
+    """Scan raw argv for ``--mesh DxM`` / ``--mesh=DxM`` pre-import.
+
+    Malformed specs are ignored here — argparse and parse_mesh_spec
+    produce the real errors once main() runs.
+    """
+    spec = None
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            spec = argv[i + 1]
+        elif a.startswith("--mesh="):
+            spec = a.split("=", 1)[1]
+    if spec is None:
+        return
+    try:
+        d, m = (int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        return
+    if d >= 1 and m >= 1:
+        _ensure_cpu_mesh_devices(d * m)
+
+
+_peek_mesh_devices(sys.argv[1:])
 
 import jax
 import numpy as np
@@ -33,10 +76,29 @@ import numpy as np
 from repro.configs import get_config
 from repro.models.model_zoo import build_model
 from repro.runtime.kv_cache import OutOfPagesError
-from repro.runtime.serve_loop import PagedServingSession, ServingSession
+from repro.runtime.serve_loop import (
+    PagedServingSession,
+    ServingSession,
+    ShardedPagedServingSession,
+)
 
 
 def _build_session(args, cfg, model, params):
+    if args.mesh:
+        from repro.launch.mesh import make_serving_mesh
+
+        return ShardedPagedServingSession(
+            model,
+            params,
+            num_pages=args.num_pages,
+            mesh=make_serving_mesh(args.mesh),
+            page_size=args.page_size,
+            block_k=args.block_k,
+            prefill_chunk=args.prefill_chunk,
+            prefix_sharing=args.shared_prefix,
+            max_batch=args.batch,
+            kv_dtype=args.kv_dtype,
+        )
     if args.cache == "paged":
         return PagedServingSession(
             model,
@@ -131,7 +193,7 @@ def _shared_prefix_demo(sess, cfg, seed, gen_len):
         kids.append(kid)
     print(
         f"shared-prefix demo: parent {parent} + children {kids}; "
-        f"{sess.cache.num_aliased_pages()} pages aliased across "
+        f"{sess.work_stats()['aliased_pages']} pages aliased across "
         f"{cfg.n_layers} layers (zero rows copied)"
     )
     for _ in range(gen_len):
@@ -164,8 +226,22 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", action="store_true",
                     help="paged only: serve a forked system-prompt family "
                     "with group-batched prefix attention")
+    ap.add_argument("--mesh", default=None,
+                    help="paged only: DxM serving mesh, e.g. 2x1 — shard "
+                    "the page pool + decode queue over D data shards with "
+                    "M-way tensor-parallel heads each (CPU hosts get the "
+                    "devices forced via XLA_FLAGS automatically)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.mesh:
+        if args.cache != "paged":
+            raise SystemExit("--mesh needs --cache paged (the dense backend "
+                             "shards through runtime.serve_loop.jit_serve_fns)")
+        from repro.launch.mesh import parse_mesh_spec
+
+        d, m = parse_mesh_spec(args.mesh)
+        _ensure_cpu_mesh_devices(d * m)
 
     arch = args.arch or (
         "deepseek-v2-mla" if args.cache == "paged" else "qwen1.5-0.5b"
@@ -174,7 +250,14 @@ def main(argv=None):
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     sess = _build_session(args, cfg, model, params)
-    print(f"serving {arch} with the {args.cache} cache backend")
+    backend = args.cache + (f" (sharded over {args.mesh})" if args.mesh else "")
+    print(f"serving {arch} with the {backend} cache backend")
+    if args.mesh:
+        print(
+            f"mesh {args.mesh}: {sess.num_shards} data shards x "
+            f"{sess.head_shards}-way heads, "
+            f"{args.num_pages // sess.num_shards} pages per shard pool"
+        )
 
     if args.shared_prefix:
         if args.cache != "paged":
@@ -210,6 +293,18 @@ def main(argv=None):
             f"({work['page_dma_bytes'] / 1e6:.2f} MB at "
             f"{args.kv_dtype or 'model'} cache dtype)"
         )
+        if args.mesh:
+            bal = work["balance"]
+            for i, st in enumerate(work["per_shard"]):
+                print(
+                    f"shard {i}: {st['page_dmas']} page DMAs, "
+                    f"{st['decode_steps']} decode steps, "
+                    f"{st['free_pages']} pages free"
+                )
+            print(
+                f"shard work balance: max/mean = {bal['imbalance']:.2f} "
+                f"({bal['max']:.0f}/{bal['mean']:.1f} page DMAs)"
+            )
 
 
 if __name__ == "__main__":

@@ -392,29 +392,49 @@ def _paged_logits_at(params, x, idx, *, cfg):
 
 def _paged_attend(
     q, cache, layer, bt, kv_len, *, cfg, block_k, schedule, q_offset,
-    num_splits, interpret, compute_dtype, variant,
+    num_splits, interpret, compute_dtype, variant, head_shards: int = 1,
 ):
     from repro.kernels import ops
 
-    return ops.mla_decode_paged(
-        q,
-        cache.layer_pages(layer),
-        bt,
-        kv_len,
-        # int8 pools carry per-row dequant scales; the queue kernel fuses
-        # the dequant into its preload pipeline (see kernels.ops).
-        kv_scales=cache.layer_scales(layer),
-        d_v=cfg.mla.d_latent,
-        variant=variant,
-        scale=mla_scale(cfg),
-        interpret=interpret,
-        q_offset=q_offset,
-        scheduler="queue",
-        block_k=block_k,
-        num_splits=num_splits,
-        schedule=schedule,
-        compute_dtype=compute_dtype,
-    )
+    def attend(q_part):
+        return ops.mla_decode_paged(
+            q_part,
+            cache.layer_pages(layer),
+            bt,
+            kv_len,
+            # int8 pools carry per-row dequant scales; the queue kernel
+            # fuses the dequant into its preload pipeline (see kernels.ops).
+            kv_scales=cache.layer_scales(layer),
+            d_v=cfg.mla.d_latent,
+            variant=variant,
+            scale=mla_scale(cfg),
+            interpret=interpret,
+            q_offset=q_offset,
+            scheduler="queue",
+            block_k=block_k,
+            num_splits=num_splits,
+            schedule=schedule,
+            compute_dtype=compute_dtype,
+        )
+
+    if head_shards <= 1:
+        return attend(q)
+    # Tensor-parallel head groups (the mesh's ``model`` axis): query heads
+    # are independent in the queue kernel (per-row softmax over the same
+    # pages), so chunking the head axis is bitwise exact and every chunk
+    # reuses the same per-(request, block) schedule.  On one process this
+    # runs the chunks sequentially; a multi-controller deployment runs one
+    # chunk per model-axis device against its pool replica.
+    hq = q.shape[2]
+    if hq % head_shards:
+        raise ValueError(
+            f"head_shards={head_shards} must divide n_heads={hq}"
+        )
+    step = hq // head_shards
+    parts = [
+        attend(q[:, :, i * step : (i + 1) * step]) for i in range(head_shards)
+    ]
+    return jnp.concatenate(parts, axis=2)
 
 
 def lm_prefill_paged(
@@ -432,6 +452,7 @@ def lm_prefill_paged(
     interpret: bool = False,
     layer_params: list | None = None,
     compute_dtype=None,
+    head_shards: int = 1,
 ) -> jax.Array:
     """Chunked prefill-into-pages; returns last-token logits ``(1, vocab)``.
 
@@ -480,7 +501,7 @@ def lm_prefill_paged(
                 q, cache, l, bt, kv_len, cfg=cfg, block_k=block_k,
                 schedule=schedule, q_offset=q_off, num_splits=1,
                 interpret=interpret, compute_dtype=compute_dtype,
-                variant=variant,
+                variant=variant, head_shards=head_shards,
             )
             x = _paged_layer_post(p_l, x, attn, cfg=cfg)
         logits = _paged_logits_at(params, x, jnp.int32(valid - 1), cfg=cfg)
@@ -504,6 +525,7 @@ def lm_decode_step_paged(
     interpret: bool = False,
     layer_params: list | None = None,
     compute_dtype=None,
+    head_shards: int = 1,
 ) -> jax.Array:
     """One paged full-model decode step; returns logits ``(B, 1, vocab)``.
 
@@ -572,6 +594,7 @@ def lm_decode_step_paged(
             q, cache, l, bt, kv_len, cfg=cfg, block_k=block_k,
             schedule=schedule, q_offset=None, num_splits=num_splits,
             interpret=interpret, compute_dtype=compute_dtype, variant=variant,
+            head_shards=head_shards,
         )
         x = _paged_layer_post(p_l, x, attn, cfg=cfg)
     return _paged_logits_at(params, x, jnp.int32(0), cfg=cfg)

@@ -259,6 +259,21 @@ class PagedKVCache:
     # ------------------------------------------------------------------ #
     # bookkeeping
     # ------------------------------------------------------------------ #
+    def to_device(self, device) -> "PagedKVCache":
+        """Commit the pool (and scale pool) to ``device``.
+
+        Sharded serving places one pool per data shard; device_put commits
+        the arrays, and the donated jit write/copy helpers keep every
+        subsequent pool update resident on that device.  Host-side
+        bookkeeping (free list, refcounts) is untouched.  No-op when
+        ``device`` is None.
+        """
+        if device is not None:
+            self.pages = jax.device_put(self.pages, device)
+            if self.scales is not None:
+                self.scales = jax.device_put(self.scales, device)
+        return self
+
     @property
     def quantized(self) -> bool:
         """True when the pool stores int8 rows + a per-row scale pool."""

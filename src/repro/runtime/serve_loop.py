@@ -115,13 +115,32 @@ class ServingSession:
 
     def add_request(self, prompt_tokens) -> int | None:
         """Prefill a prompt into a free slot; returns request id or None."""
+        prompt_tokens = list(map(int, prompt_tokens))
+        plen = len(prompt_tokens)
+        if plen < 1:
+            raise ValueError(
+                "add_request needs at least one prompt token (an empty "
+                "prompt has no prefill position to decode from)"
+            )
+        if plen > self.max_len:
+            raise ValueError(
+                f"prompt of {plen} tokens exceeds this session's "
+                f"max_len={self.max_len}; raise max_len or truncate the "
+                "prompt (slots reserve exactly max_len cache rows)"
+            )
         if None not in self.slot_rid:
             return None
         slot = self.slot_rid.index(None)
+        # Recycled-slot invariant: finish() zeroes the slot's decode state,
+        # so a reused slot must look factory-fresh here — decoding from a
+        # stale cache_len/last_token would splice the previous request's
+        # context into this one.
+        assert self.cache_len[slot] == 0 and self.last_token[slot] == 0, (
+            f"slot {slot} reused with stale state: cache_len="
+            f"{self.cache_len[slot]}, last_token={self.last_token[slot]}"
+        )
         rid = self._next_id
         self._next_id += 1
-        prompt_tokens = list(map(int, prompt_tokens))
-        plen = len(prompt_tokens)
         blen = self._bucket_len(plen)
         padded = prompt_tokens + [0] * (blen - plen)
         prompt = jnp.asarray(padded, jnp.int32)[None]
@@ -172,9 +191,6 @@ class ServingSession:
         # slots, but the very next admit must start from its own prefill
         # logits, not this leftover).
         self.last_token[slot] = 0
-        assert self.cache_len[slot] == 0, (
-            f"slot {slot} freed with nonzero cache_len {self.cache_len[slot]}"
-        )
         return self.outputs.pop(rid)
 
 
@@ -225,6 +241,8 @@ class PagedServingSession:
         interpret: bool | None = None,
         dtype=None,
         kv_dtype=None,
+        device=None,
+        head_shards: int = 1,
     ):
         from repro.kernels import ops
         from repro.kernels.decode_schedule import DecodeScheduler
@@ -232,6 +250,19 @@ class PagedServingSession:
         from repro.runtime.kv_cache import CacheSpec
 
         _tf.check_paged_compatible(model.cfg)
+        if model.cfg.n_heads % head_shards:
+            raise ValueError(
+                f"head_shards={head_shards} must divide "
+                f"n_heads={model.cfg.n_heads} (tensor-parallel head groups "
+                "split the query head axis evenly)"
+            )
+        if device is not None:
+            # Commit this session's params replica to its shard device so
+            # the cache pool (placed below) and every kernel call stay
+            # resident there; donated pool writes keep the residency.
+            params = jax.device_put(params, device)
+        self.device = device
+        self.head_shards = head_shards
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -250,6 +281,8 @@ class PagedServingSession:
             params, num_pages=num_pages, page_size=page_size,
             spec=self.cache_spec,
         )
+        if device is not None:
+            self.cache.to_device(device)
         # Fixed block-table width: stable kernel input shapes across
         # admits/evicts and page-boundary growth (see PagedDecodeSession).
         self.table_width = num_pages
@@ -336,6 +369,19 @@ class PagedServingSession:
         from repro.models import transformer as _tf
 
         prompt = list(map(int, prompt_tokens))
+        if len(prompt) < 1:
+            raise ValueError(
+                "add_request needs at least one prompt token (an empty "
+                "prompt has no prefill position to decode from)"
+            )
+        need = -(-len(prompt) // self.cache.page_size)
+        if need > self.cache.num_pages:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens needs {need} pages but the "
+                f"pool only has {self.cache.num_pages} total; grow "
+                "num_pages/page_size or truncate the prompt (it can never "
+                "be admitted, even into an empty pool)"
+            )
         if self.max_batch is not None and len(self.active) >= self.max_batch:
             return None
         if not self.cache.has_room(None, len(prompt)):
@@ -356,6 +402,7 @@ class PagedServingSession:
             interpret=self.interpret,
             layer_params=self._layers,
             compute_dtype=self.compute_dtype,
+            head_shards=self.head_shards,
         )
         return self._admit(rid, int(jnp.argmax(logits[0])))
 
@@ -424,6 +471,7 @@ class PagedServingSession:
             interpret=self.interpret,
             layer_params=self._layers,
             compute_dtype=self.compute_dtype,
+            head_shards=self.head_shards,
         )
         return self._admit(child, int(jnp.argmax(logits[0])))
 
@@ -458,6 +506,7 @@ class PagedServingSession:
             interpret=self.interpret,
             layer_params=self._layers,
             compute_dtype=self.compute_dtype,
+            head_shards=self.head_shards,
         )
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
         for i, r in enumerate(rids):
@@ -487,6 +536,251 @@ class PagedServingSession:
         self.cache.free(rid)
         self.last_token.pop(rid, None)
         return self.outputs.pop(rid)
+
+
+class ShardedPagedServingSession:
+    """Multi-host paged serving: the page pool + decode work queue sharded
+    over a ``(data, model)`` mesh with data-parallel request routing.
+
+    Each ``data`` shard owns one :class:`PagedServingSession` — a full
+    :class:`~repro.runtime.kv_cache.LayeredPagedKVCache` slice of the global
+    pool, its own memoizing :class:`~repro.kernels.decode_schedule
+    .DecodeScheduler`, and (on a real mesh) a committed params replica on
+    the shard's anchor device.  A request's pages *and* its queue items
+    live entirely on one shard:
+
+    * **admission** routes through
+      :func:`~repro.kernels.decode_schedule.route_request` — least live
+      KV blocks wins (live blocks = queue items per decode step, the work
+      proxy), ties toward more free pages;
+    * **fork / admit_with_prefix** pin the child to the parent's shard:
+      page aliasing is pool-local, so a forked-prefix family never
+      straddles shards (and the PR 3 prefix-grouping machinery composes
+      unchanged within a shard);
+    * **decode** runs each shard's own ``build_schedule`` over its local
+      ``kv_lens`` and its local ``ops.mla_decode_paged``; the ``model``
+      axis carries tensor-parallel head groups within a shard
+      (``head_shards`` query-head chunks — exact, heads are independent).
+      A request split *across* shards would merge its per-shard ``(o,
+      lse)`` partials with the combine formula
+      (:func:`repro.core.distributed.combine_shard_partials`); the
+      data-parallel router never needs to, which is what keeps sharded
+      greedy outputs **bit-identical** to the single-host backend.
+
+    ``mesh=None, shards=N`` runs N logical shards on the default device —
+    same routing, same per-shard pools and schedules, no placement — so
+    single-device CI exercises the full code path; a real mesh only adds
+    ``device_put`` placement per shard.
+    """
+
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        num_pages: int,
+        mesh=None,
+        shards: int | None = None,
+        head_shards: int | None = None,
+        page_size: int | None = None,
+        block_k: int | None = None,
+        num_splits: int = 1,
+        prefix_sharing: bool = False,
+        min_group: int = 2,
+        prefill_chunk: int = 32,
+        max_batch: int | None = None,
+        interpret: bool | None = None,
+        dtype=None,
+        kv_dtype=None,
+    ):
+        if mesh is not None and shards is not None:
+            raise ValueError("pass mesh= or shards=, not both")
+        if mesh is not None:
+            devices = sharding.serving_shard_devices(mesh)
+            n_data = len(devices)
+            n_model = int(np.prod(mesh.devices.shape)) // n_data
+        else:
+            n_data = int(shards or 1)
+            n_model = 1
+            devices = [None] * n_data
+        if n_data < 1:
+            raise ValueError(f"need at least one data shard, got {n_data}")
+        if num_pages % n_data:
+            raise ValueError(
+                f"num_pages={num_pages} must split evenly over {n_data} "
+                f"data shards (use a multiple of {n_data})"
+            )
+        self.mesh = mesh
+        self.num_shards = n_data
+        self.head_shards = int(head_shards or n_model)
+        self.max_batch = max_batch
+        self.shards = [
+            PagedServingSession(
+                model,
+                params,
+                num_pages=num_pages // n_data,
+                page_size=page_size,
+                block_k=block_k,
+                num_splits=num_splits,
+                prefix_sharing=prefix_sharing,
+                min_group=min_group,
+                prefill_chunk=prefill_chunk,
+                interpret=interpret,
+                dtype=dtype,
+                kv_dtype=kv_dtype,
+                device=dev,
+                head_shards=self.head_shards,
+            )
+            for dev in devices
+        ]
+        self.block_k = self.shards[0].block_k
+        # global rid -> (shard index, shard-local rid)
+        self._where: dict[int, tuple[int, int]] = {}
+        self.active: list[int] = []
+        self.outputs: dict[int, list[int]] = {}
+        self._next_id = 0
+
+    # -- routing -------------------------------------------------------- #
+    def _live_blocks(self, shard: PagedServingSession) -> int:
+        return sum(
+            -(-shard.cache.seq_len(r) // self.block_k) for r in shard.active
+        )
+
+    def shard_of(self, rid: int) -> int:
+        """Which data shard holds ``rid``'s pages + queue items."""
+        return self._where[rid][0]
+
+    def _register(self, shard_idx: int, local_rid: int) -> int:
+        gid = self._next_id
+        self._next_id += 1
+        self._where[gid] = (shard_idx, local_rid)
+        self.active.append(gid)
+        # Share the list object: the shard session appends generated tokens
+        # in place, so this view stays current without copying.
+        self.outputs[gid] = self.shards[shard_idx].outputs[local_rid]
+        return gid
+
+    # -- admission / branching ------------------------------------------ #
+    def add_request(self, prompt_tokens) -> int | None:
+        """Route a prompt to the least-loaded shard and prefill it there;
+        returns a global rid, or None when no shard has room."""
+        from repro.kernels.decode_schedule import route_request
+
+        prompt = list(map(int, prompt_tokens))
+        if len(prompt) < 1:
+            raise ValueError(
+                "add_request needs at least one prompt token (an empty "
+                "prompt has no prefill position to decode from)"
+            )
+        pool = self.shards[0].cache
+        pages = -(-len(prompt) // pool.page_size)
+        if pages > pool.num_pages:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens needs {pages} pages but "
+                f"each of the {self.num_shards} shard pools only has "
+                f"{pool.num_pages}; a request lives on ONE shard — grow "
+                "num_pages or truncate the prompt"
+            )
+        if self.max_batch is not None and len(self.active) >= self.max_batch:
+            return None
+        idx = route_request(
+            [self._live_blocks(s) for s in self.shards],
+            [s.cache.num_free_pages for s in self.shards],
+            pages,
+        )
+        if idx is None:
+            return None  # no shard has room right now: evict and retry
+        local = self.shards[idx].add_request(prompt)
+        if local is None:
+            return None
+        return self._register(idx, local)
+
+    def fork(self, rid: int, prefix_len: int | None = None) -> int:
+        """Branch at full history on the parent's shard (aliasing is
+        pool-local, so the family stays together)."""
+        idx, local = self._where[rid]
+        child_local = self.shards[idx].fork(local, prefix_len)
+        return self._register(idx, child_local)
+
+    def admit_with_prefix(
+        self, parent_rid: int, suffix_tokens, prefix_len: int | None = None
+    ) -> int | None:
+        """Branch + suffix prefill on the parent's shard.  Returns None when
+        *that* shard lacks pages — prefix pages cannot alias across pools,
+        so there is no cross-shard fallback (callers evict or fall back to
+        a plain add_request)."""
+        idx, local = self._where[parent_rid]
+        child_local = self.shards[idx].admit_with_prefix(
+            local, suffix_tokens, prefix_len
+        )
+        if child_local is None:
+            return None
+        return self._register(idx, child_local)
+
+    # -- decode ---------------------------------------------------------- #
+    def step(self) -> None:
+        """One greedy decode step on every shard with live requests.
+
+        Each shard batches only its own requests — per-shard
+        ``build_schedule`` from per-shard ``kv_lens`` — so the queue math
+        per request is identical to a single-host session holding the same
+        requests (schedules are per-request up to dest slots), which is
+        what the greedy-parity acceptance tests pin down.
+        """
+        for shard in self.shards:
+            if shard.active:
+                shard.step()
+
+    def finish(self, rid: int) -> list[int]:
+        idx, local = self._where.pop(rid)
+        self.active.remove(rid)
+        self.outputs.pop(rid)
+        return self.shards[idx].finish(local)
+
+    # -- introspection --------------------------------------------------- #
+    @property
+    def scheduler_stats(self) -> dict:
+        """Summed schedule build/reuse counters across shards."""
+        return {
+            "hits": sum(s.scheduler_stats["hits"] for s in self.shards),
+            "rebuilds": sum(
+                s.scheduler_stats["rebuilds"] for s in self.shards
+            ),
+        }
+
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct prefill chunk shapes across shards (fixed chunking
+        keeps this at 1: every shard traces the same (1, chunk) shape)."""
+        return len(set().union(*(s._prefill_shapes for s in self.shards)))
+
+    def work_stats(self) -> dict:
+        """Aggregate work proxies + per-shard balance.
+
+        ``balance`` is :func:`~repro.kernels.decode_schedule
+        .shard_work_balance` over per-shard page DMAs (the queue-work
+        proxy): ``imbalance`` = max/mean, 1.0 when perfectly even, gated
+        <= 2.0 on the ragged benchmark scenario.
+        """
+        from repro.kernels.decode_schedule import shard_work_balance
+
+        per_shard = [s.work_stats() for s in self.shards]
+        agg = {
+            k: sum(st[k] for st in per_shard)
+            for k in (
+                "decode_steps",
+                "page_dmas",
+                "page_dma_bytes",
+                "rows_attended",
+                "aliased_pages",
+                "free_pages",
+            )
+        }
+        agg["per_shard"] = per_shard
+        agg["balance"] = shard_work_balance(
+            [st["page_dmas"] for st in per_shard]
+        )
+        return agg
 
 
 class PagedDecodeSession:
@@ -632,7 +926,12 @@ class PagedDecodeSession:
         exactly like :meth:`admit`.
         """
         latent_suffix = jnp.asarray(latent_suffix)
-        n = int(latent_suffix.shape[0]) if latent_suffix.ndim else 0
+        if latent_suffix.ndim == 1 and latent_suffix.shape[0]:
+            # Single (d_k,) row — same normalization as step(); without it
+            # admission control counts n = d_k "rows" and append rejects
+            # the shape.  A 0-length 1-D array stays the empty suffix.
+            latent_suffix = latent_suffix[None]
+        n = int(latent_suffix.shape[0]) if latent_suffix.ndim >= 2 else 0
         child = self.fork(parent_rid, prefix_len)
         if n:
             if not self.kv.has_room(child, n):

@@ -294,3 +294,35 @@ def make_shardings(mesh, tree, spec_fn):
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: NamedSharding(mesh, spec_fn(path, leaf)), tree
     )
+
+
+# --------------------------------------------------------------------------- #
+# serving-shard placement (data-parallel paged pools)
+# --------------------------------------------------------------------------- #
+# Sharded paged serving routes each request (its pages + queue items) to ONE
+# ``data`` shard; pools never straddle shards, so placement is per-shard
+# device_put rather than a global NamedSharding over the pool.  The ``model``
+# axis carries tensor-parallel head groups *within* a shard (the head-chunk
+# loop in ``models.transformer``); on a 1-column mesh the shard root device
+# owns everything.
+
+
+def serving_shard_devices(mesh) -> list:
+    """One anchor device per ``data`` shard (the shard's first model column)."""
+    if mesh is None:
+        raise ValueError("serving_shard_devices needs a mesh; got None")
+    if "data" not in mesh.axis_names:
+        raise ValueError(f"mesh axes {mesh.axis_names} lack 'data'")
+    devs = mesh.devices.reshape(mesh.shape["data"], -1)
+    return [devs[i, 0] for i in range(devs.shape[0])]
+
+
+def shard_put(tree, device):
+    """Place a pytree onto a shard's anchor device (no-op when device=None).
+
+    device_put commits the arrays: subsequent donated jit updates (pool
+    writes, cache appends) stay resident on that device.
+    """
+    if device is None:
+        return tree
+    return jax.device_put(tree, device)

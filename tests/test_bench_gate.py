@@ -1,0 +1,99 @@
+"""Unit tests for the benchmark regression gate (benchmarks/run.py).
+
+``check_regression`` is the CI tripwire for the deterministic work proxies;
+these tests pin its comparison semantics — in particular that a **zero
+baseline is a real reference** (gate equal-or-better outright), not a
+missing one.  The old ``if not ref`` guard skipped every zero baseline, so
+a proxy that must stay at zero (e.g. schedule rebuilds in a reuse-heavy
+scenario) could regress to any value without failing the build.
+
+benchmarks/ is intentionally not a package, so the module loads via an
+explicit file-location spec.
+"""
+
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_RUN_PY = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" / "run.py"
+
+
+@pytest.fixture(scope="module")
+def bench():
+    spec = importlib.util.spec_from_file_location("bench_run", _RUN_PY)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _report(metrics, tier="smoke", mode="cpu-interpret"):
+    return {
+        "tier": tier,
+        "mode": mode,
+        "model_serve": {"serving": dict(metrics)},
+    }
+
+
+def _baseline(tmp_path, metrics, **kw):
+    path = tmp_path / "baseline.json"
+    path.write_text(json.dumps(_report(metrics, **kw)))
+    return str(path)
+
+
+def test_regression_fails_on_work_proxy_increase(bench, tmp_path):
+    base = _baseline(tmp_path, {"page_dmas_paged": 100})
+    now = _report({"page_dmas_paged": 120})
+    fails = bench.check_regression(now, base, tol=0.10)
+    assert fails == [("serving", "page_dmas_paged", 100, 120)]
+    # within tolerance passes
+    ok = _report({"page_dmas_paged": 105})
+    assert bench.check_regression(ok, base, tol=0.10) == []
+
+
+def test_zero_baseline_gates_equal_or_better(bench, tmp_path):
+    """ref == 0 on a lower-is-better proxy: staying at zero passes, any
+    growth fails — previously `if not ref` skipped the check entirely."""
+    base = _baseline(tmp_path, {"schedule_rebuilds": 0})
+    assert bench.check_regression(
+        _report({"schedule_rebuilds": 0}), base, tol=0.10
+    ) == []
+    fails = bench.check_regression(
+        _report({"schedule_rebuilds": 3}), base, tol=0.10
+    )
+    assert fails == [("serving", "schedule_rebuilds", 0, 3)]
+
+
+def test_zero_baseline_higher_is_better(bench, tmp_path):
+    """ref == 0 on a higher-is-better metric: >= 0 is equal-or-better."""
+    base = _baseline(tmp_path, {"greedy_match_vs_single": 0.0})
+    assert bench.check_regression(
+        _report({"greedy_match_vs_single": 1.0}), base, tol=0.10
+    ) == []
+
+
+def test_missing_baseline_metric_skips(bench, tmp_path):
+    """None (absent) baseline really is 'nothing to compare against'."""
+    base = _baseline(tmp_path, {"page_dmas_paged": 100})
+    now = _report({"page_dmas_paged": 100, "schedule_rebuilds": 50})
+    assert bench.check_regression(now, base, tol=0.10) == []
+
+
+def test_tier_mode_mismatch_skips_gate(bench, tmp_path):
+    base = _baseline(tmp_path, {"page_dmas_paged": 1}, tier="full")
+    now = _report({"page_dmas_paged": 999})
+    assert bench.check_regression(now, base, tol=0.10) == []
+
+
+def test_missing_baseline_file_skips_gate(bench, tmp_path):
+    now = _report({"page_dmas_paged": 999})
+    assert bench.check_regression(now, str(tmp_path / "nope.json"), 0.1) == []
+
+
+def test_sharded_metrics_are_registered(bench):
+    """The sharded [MODEL-SERVE] row's parity + balance metrics must stay
+    wired into the gate (both deterministic, so they gate in CI mode)."""
+    src = _RUN_PY.read_text()
+    assert '"greedy_match_vs_single", False' in src
+    assert '"shard_imbalance", True' in src

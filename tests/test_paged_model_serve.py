@@ -285,6 +285,21 @@ def test_paged_prefill_single_chunk_shape(model_and_params):
     assert paged.prefill_compiles == 1
 
 
+def test_paged_add_request_prompt_validation(model_and_params):
+    """Paged admission distinguishes 'no room right now' (None — caller
+    retries after evictions) from 'can never fit' (raise — even an empty
+    pool lacks the pages), and rejects empty prompts outright."""
+    model, params = model_and_params
+    paged = make_paged(model, params, num_pages=4)  # 64 rows total
+    with pytest.raises(ValueError, match="at least one prompt token"):
+        paged.add_request([])
+    with pytest.raises(ValueError, match="never be admitted"):
+        paged.add_request(prompts_for(9, (4 * PAGE + 1,))[0])
+    # a pool-filling prompt is legal; the *next* one gets a retryable None
+    assert paged.add_request(prompts_for(9, (4 * PAGE,))[0]) is not None
+    assert paged.add_request(prompts_for(9, (PAGE,))[0]) is None
+
+
 def test_paged_incompatible_arch_rejected(model_and_params):
     del model_and_params
     gqa = build_model(get_config("qwen1.5-0.5b", smoke=True))

@@ -263,6 +263,34 @@ def test_session_admit_with_prefix_pool_pressure():
     assert kid is not None and sess.kv.seq_len(kid) == 18
 
 
+def test_session_admit_with_prefix_accepts_single_1d_row():
+    """A bare (d_k,) suffix row normalizes like step()'s single-token path:
+    it must count as ONE row for admission control (not d_k rows) and land
+    as the child's first private token — the un-normalized shape previously
+    blew past has_room and then failed the append shape check."""
+    d_k, page = 16, 4
+    sess = PagedDecodeSession(
+        num_pages=8, page_size=page, d_k=d_k, d_v=8, scale=0.25,
+        interpret=True, dtype=jnp.float32,
+    )
+    parent = sess.admit(np.ones((10, d_k), np.float32))
+    row = np.full((d_k,), 2.0, np.float32)  # 1-D, as step() also accepts
+    kid = sess.admit_with_prefix(parent, row)
+    assert kid is not None
+    assert sess.kv.seq_len(kid) == 11
+    got = np.asarray(sess.kv.gather_contiguous(kid))
+    np.testing.assert_array_equal(got[-1], row)
+    np.testing.assert_array_equal(got[:10], np.ones((10, d_k)))
+    # parity with the 2-D spelling of the same suffix
+    kid2 = sess.admit_with_prefix(parent, row[None])
+    np.testing.assert_array_equal(
+        np.asarray(sess.kv.gather_contiguous(kid2)), got
+    )
+    # a 0-length 1-D array still means "empty suffix" (pure aliasing fork)
+    empty = sess.admit_with_prefix(parent, np.zeros((0,), np.float32))
+    assert empty is not None and sess.kv.seq_len(empty) == 10
+
+
 def test_session_fork_rejects_dead_parent():
     sess = PagedDecodeSession(
         num_pages=4, page_size=4, d_k=16, d_v=8, scale=0.25,

@@ -140,6 +140,43 @@ def test_serving_session_slots_and_outputs():
     assert len(out2) == 6 and len(out3) == 2
 
 
+def test_serving_session_prompt_length_validation():
+    """Admission rejects prompts the slot geometry can never serve: empty
+    (no prefill position to decode from) and longer than max_len (a slot
+    reserves exactly max_len cache rows) — both previously prefilled
+    garbage instead of raising."""
+    model, cfg = tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    sess = ServingSession(model, params, batch_size=1, max_len=16)
+    with pytest.raises(ValueError, match="at least one prompt token"):
+        sess.add_request([])
+    with pytest.raises(ValueError, match="max_len=16"):
+        sess.add_request(list(range(2, 19)))  # 17 tokens
+    # the boundary itself is fine: a max_len prompt fills the slot exactly
+    assert sess.add_request(list(range(2, 18))) is not None
+
+
+def test_serving_session_recycled_slot_invariant():
+    """finish() zeroes the slot's decode state and add_request asserts it:
+    the old finish-time check ran *after* the zeroing and could never fire,
+    so a stale-state bug would have decoded the previous request's token
+    into the new one silently."""
+    model, cfg = tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    sess = ServingSession(model, params, batch_size=1, max_len=32)
+    r1 = sess.add_request([5, 6, 7])
+    for _ in range(2):
+        sess.step()
+    sess.finish(r1)
+    assert sess.cache_len[0] == 0 and sess.last_token[0] == 0
+    # corrupt the freed slot: the admission-time invariant must now fire
+    sess.last_token[0] = 99
+    with pytest.raises(AssertionError, match="stale state"):
+        sess.add_request([3, 4])
+    sess.last_token[0] = 0
+    assert sess.add_request([3, 4]) is not None  # clean slot admits again
+
+
 def test_serving_session_matches_batch_decode():
     """Slot-based serving produces the same tokens as direct decode."""
     model, cfg = tiny_model()
