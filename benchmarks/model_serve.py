@@ -14,7 +14,10 @@ runtime.serve_loop backends and reports, per scenario:
   their reduction factor, decode-schedule rebuilds (one per block_k
   boundary / churn event, never per layer) and prefill compile counts
   (pow2 buckets dense, fixed chunk paged).  These gate CI regressions
-  exactly (see benchmarks/run.py check_regression).
+  exactly (see benchmarks/run.py check_regression);
+* **speculative decode** — a draft-verify row (``--speculate ngram``)
+  gated on exact greedy parity with off, accepted_tokens_per_step > 1.0,
+  and page-DMA bytes per *accepted* token at or below the off baseline.
 
 ``run()`` returns a JSON-able dict merged into BENCH_decode.json under
 ``model_serve`` and summarized into BENCH_history.json.
@@ -249,6 +252,96 @@ def _dtype_scenario(cfg, model, params, g) -> dict:
     }
 
 
+def _speculative_scenario(cfg, model, params, g, *, draft_k: int = 4) -> dict:
+    """Speculative-vs-off row on a repetitive-suffix stream.
+
+    Two paged sessions serve the same prompts (random head + cycled 3-token
+    tail — the traffic shape n-gram drafting exists for); ``off`` emits one
+    token per request-step, ``ngram`` verifies ``draft_k`` rows per fused
+    step and rolls rejected drafts back.  Gates: the speculative token
+    stream must be an exact prefix-match of the non-speculative one
+    (``greedy_match_vs_off == 1.0`` — drafting can never change tokens),
+    ``accepted_tokens_per_step > 1.0`` (the drafter actually lands
+    something), and ``page_dma_bytes_per_accepted_token`` at or below the
+    off baseline — the amortization headline: the same page fetches feeding
+    k verified rows instead of one.
+    """
+    rng = np.random.default_rng(0)
+    pattern = rng.integers(2, cfg.vocab_size, size=3).tolist()
+    prompts = []
+    for n in g["prompts"][:2]:
+        head = rng.integers(2, cfg.vocab_size, size=max(n // 2, 1)).tolist()
+        tail = [pattern[i % 3] for i in range(n - len(head))]
+        prompts.append(head + tail)
+    # Long enough for the greedy stream to settle into the loops the
+    # drafter feeds on (acceptance is back-loaded: early steps are the
+    # stream finding its cycle, so short horizons understate it).
+    target = 5 * g["steps"]
+
+    def _mk(speculate):
+        return PagedServingSession(
+            model, params, num_pages=g["num_pages"], page_size=g["page"],
+            block_k=g["block_k"], prefill_chunk=g["chunk"],
+            speculate=speculate, draft_k=draft_k,
+        )
+
+    off = _mk("off")
+    r_off = [off.add_request(p) for p in prompts]
+    t0 = time.perf_counter()
+    for _ in range(target):
+        off.step()
+    jax.block_until_ready(off.cache.pages)
+    dt_off = time.perf_counter() - t0
+
+    spec = _mk("ngram")
+    r_spec = [spec.add_request(p) for p in prompts]
+    t0 = time.perf_counter()
+    it = 0
+    while it < draft_k * target and any(
+        len(spec.outputs[rs]) < len(off.outputs[ro])
+        for ro, rs in zip(r_off, r_spec)
+    ):
+        spec.step()
+        it += 1
+    jax.block_until_ready(spec.cache.pages)
+    dt_spec = time.perf_counter() - t0
+
+    # A speculative step can overshoot the horizon by up to draft_k - 1
+    # tokens; parity is prefix-exact against the off stream.
+    matches = sum(
+        off.outputs[ro] == spec.outputs[rs][: len(off.outputs[ro])]
+        for ro, rs in zip(r_off, r_spec)
+    )
+    work, work_off = spec.work_stats(), off.work_stats()
+    toks_off = len(prompts) * target
+    toks_spec = sum(len(spec.outputs[r]) - 1 for r in r_spec)
+    return {
+        "requests": len(prompts),
+        "draft_k": draft_k,
+        "decode_steps": work["decode_steps"],
+        "request_steps": work["request_steps"],
+        "query_rows": work["query_rows"],
+        "accepted_tokens": work["accepted_tokens"],
+        "accepted_tokens_per_step": work["accepted_tokens_per_step"],
+        "tokens_per_s_paged": toks_spec / max(dt_spec, 1e-9),
+        "tokens_per_s_off": toks_off / max(dt_off, 1e-9),
+        "page_dmas_paged": work["page_dmas"],
+        "page_dma_bytes_paged": work["page_dma_bytes"],
+        "page_dma_bytes_per_accepted_token": work[
+            "page_dma_bytes_per_accepted_token"
+        ],
+        "page_dma_bytes_per_accepted_token_off": work_off[
+            "page_dma_bytes_per_accepted_token"
+        ],
+        "dma_per_token_vs_off": (
+            work_off["page_dma_bytes_per_accepted_token"]
+            / max(work["page_dma_bytes_per_accepted_token"], 1e-9)
+        ),
+        "greedy_match_vs_off": matches / len(prompts),
+        "schedule_rebuilds": spec.scheduler_stats["rebuilds"],
+    }
+
+
 def run(full: bool = False, smoke: bool = False) -> dict:
     tier = "full" if full else ("smoke" if smoke else "default")
     mode = "tpu" if _on_tpu() else "cpu-interpret"
@@ -270,6 +363,11 @@ def run(full: bool = False, smoke: bool = False) -> dict:
     for k, v in sorted(res.items()):
         val = f"{v:.2f}" if isinstance(v, float) else v
         print(f"model_serve,int8_vs_bf16,{k},{val}")
+    sp = _speculative_scenario(cfg, model, params, g)
+    report["scenarios"]["speculative"] = sp
+    for k, v in sorted(sp.items()):
+        val = f"{v:.2f}" if isinstance(v, float) else v
+        print(f"model_serve,speculative,{k},{val}")
     rag = report["scenarios"]["ragged"]
     print(
         f"model_serve,summary,read_reduction_vs_dense,"
@@ -292,6 +390,18 @@ def run(full: bool = False, smoke: bool = False) -> dict:
         f"model_serve,acceptance_sharded,greedy_match,"
         f"{sh['greedy_match_vs_single']:.2f},shard_imbalance,"
         f"{sh['shard_imbalance']:.2f},pass,{int(sharded_ok)}"
+    )
+    spec_ok = (
+        sp["accepted_tokens_per_step"] > 1.0
+        and sp["greedy_match_vs_off"] == 1.0
+        and sp["page_dma_bytes_per_accepted_token"]
+        <= sp["page_dma_bytes_per_accepted_token_off"]
+    )
+    print(
+        f"model_serve,acceptance_speculative,accepted_per_step,"
+        f"{sp['accepted_tokens_per_step']:.2f},greedy_match,"
+        f"{sp['greedy_match_vs_off']:.2f},dma_per_token_vs_off,"
+        f"{sp['dma_per_token_vs_off']:.2f},pass,{int(spec_ok)}"
     )
     return report
 

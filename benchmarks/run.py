@@ -17,7 +17,9 @@ The [PAGED] section additionally persists its per-scenario report
 (tokens/s, ms/step, work items, rescale-skip rate) as ``BENCH_decode.json``
 — the machine-readable perf trajectory diffed across PRs — and **appends** a
 compact summary of every run, keyed by git SHA, to ``BENCH_history.json``
-(never overwritten: the longitudinal record survives baseline refreshes).
+(never overwritten: the longitudinal record survives baseline refreshes;
+re-runs at the same SHA replace that SHA's entry so local iteration can't
+bloat the trajectory file).
 
 ``--check-regression`` turns the [PAGED] section into a CI gate: before the
 baseline file is overwritten, the freshly-measured scenarios are compared
@@ -116,6 +118,10 @@ def _summarize(report: dict) -> dict:
                 "read_reduction_vs_dense",
                 "greedy_match_vs_single",
                 "shard_imbalance",
+                "accepted_tokens_per_step",
+                "page_dma_bytes_per_accepted_token",
+                "greedy_match_vs_off",
+                "dma_per_token_vs_off",
             ))
     return out
 
@@ -136,6 +142,9 @@ def append_history(report: dict, path: str) -> None:
         "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
         **_summarize(report),
     }
+    # One entry per SHA, keep-latest: repeated local runs at the same
+    # commit would otherwise append forever and swamp the per-PR diff.
+    history = [h for h in history if h.get("sha") != entry["sha"]]
     history.append(entry)
     with open(path, "w") as f:
         json.dump(history, f, indent=2, sort_keys=True)
@@ -233,6 +242,13 @@ def check_regression(report: dict, baseline_path: str, tol: float) -> list:
         # deterministic, so they gate in CI like the other work proxies.
         ("model_serve", "greedy_match_vs_single", False, not on_tpu),
         ("model_serve", "shard_imbalance", True, not on_tpu),
+        # [MODEL-SERVE] speculative row: acceptance rate, the per-accepted-
+        # token DMA proxy, and exact greedy parity with --speculate off are
+        # all deterministic in interpret mode, so they gate like the rest.
+        ("model_serve", "accepted_tokens_per_step", False, not on_tpu),
+        ("model_serve", "page_dma_bytes_per_accepted_token", True, not on_tpu),
+        ("model_serve", "dma_per_token_vs_off", False, not on_tpu),
+        ("model_serve", "greedy_match_vs_off", False, not on_tpu),
     ]
     for section_key, metric, lower_better, gated in checks:
         for name, res in report.get(section_key, {}).items():
@@ -257,6 +273,42 @@ def check_regression(report: dict, baseline_path: str, tol: float) -> list:
             )
             if bad:
                 failures.append((name, metric, ref, now))
+    return failures
+
+
+# Hard acceptance floors checked against constants, not the committed
+# baseline — a baseline refresh can ratchet a relative gate downward, but
+# these invariants must hold outright in every deterministic run:
+# speculation accepts at least the one token a plain step would (>= 1.0 by
+# construction — below it the accounting itself is broken), stays
+# token-exact vs --speculate off, and never costs more page-DMA bytes per
+# accepted token than non-speculative decode (dma_per_token_vs_off is
+# off/spec, so >= 1.0 means at-or-below baseline).
+ABSOLUTE_FLOORS = [
+    ("model_serve", "speculative", "accepted_tokens_per_step", 1.0),
+    ("model_serve", "speculative", "greedy_match_vs_off", 1.0),
+    ("model_serve", "speculative", "dma_per_token_vs_off", 1.0),
+]
+
+
+def check_floors(report: dict) -> list:
+    """Gate ABSOLUTE_FLOORS (deterministic modes only; info on TPU, where
+    greedy near-ties can shift acceptance run to run).  Returns failures."""
+    gated = report.get("mode") != "tpu"
+    failures = []
+    for section_key, name, metric, floor in ABSOLUTE_FLOORS:
+        res = report.get(section_key, {}).get(name, {})
+        if metric not in res:
+            continue
+        now = res[metric]
+        bad = gated and now < floor
+        status = "fail" if bad else ("ok" if gated else "info")
+        print(
+            f"paged_decode,floor,{name},{metric},min,{floor},"
+            f"now,{now:.2f},{status}"
+        )
+        if bad:
+            failures.append((name, metric, floor, now))
     return failures
 
 
@@ -338,6 +390,7 @@ def main() -> None:
             failures = check_regression(
                 report, args.decode_json, args.regression_tolerance
             )
+            failures += check_floors(report)
         # Partial runs keep the baseline's other sections (gating integrity).
         report = merge_baseline_sections(report, args.decode_json)
         with open(args.decode_json, "w") as f:

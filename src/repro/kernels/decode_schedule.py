@@ -32,6 +32,13 @@ Destination-slot layout is static: request ``r`` split ``j`` accumulates
 into slot ``r * num_splits + j``, and one extra trailing slot is the dump
 for padding items, so partial-output shapes depend only on
 ``(B, num_splits)`` — never on the raggedness of the batch.
+
+Schedules are **query-row agnostic**: a dest slot's partial state carries
+all G query rows of its request at once (``(num_dest_slots, G, d_v)``), so
+the same (request, kv_block) items and the same split-KV combine serve a
+1-row decode step and a ``draft_k``-row speculative verify step alike —
+multi-row dest slots come for free, and only the *accounting* must be told
+how many rows rode each fetch (``queue_grid_items(query_rows=...)``).
 """
 
 from __future__ import annotations
@@ -554,7 +561,9 @@ def padded_grid_items(kv_lens, table_width: int, page_size: int) -> dict:
     }
 
 
-def queue_grid_items(schedule: DecodeSchedule, kv_lens, page_size: int) -> dict:
+def queue_grid_items(
+    schedule: DecodeSchedule, kv_lens, page_size: int, *, query_rows: int = 1
+) -> dict:
     """Work executed by the flat queue on this batch.
 
     Queue grid steps are §4.2-block-sized (``block_k`` rows each, incl.
@@ -563,6 +572,14 @@ def queue_grid_items(schedule: DecodeSchedule, kv_lens, page_size: int) -> dict:
     (padded) vs ``live_pages`` / ``page_dmas`` here.  Page DMAs are issued
     only for pages that intersect ``kv_len`` — dead tail sub-tiles are
     zero-filled in VMEM instead.
+
+    ``query_rows`` is the number of query token rows per request this call
+    carried (1 for a plain decode step, ``draft_k`` for a speculative
+    verify step).  Page DMAs do **not** scale with it — every fetched page
+    feeds all rows, which is speculation's amortization — but honest
+    accounting must still report the rows (``query_rows`` out) and the
+    per-row attention work (``row_reads``: kv rows scanned summed over
+    query rows), so per-token proxies divide by real tokens, not steps.
     """
     kv_lens = np.asarray(kv_lens, np.int64).reshape(-1)
     live_pages = int(sum(-(-int(l) // page_size) for l in kv_lens))
@@ -571,11 +588,13 @@ def queue_grid_items(schedule: DecodeSchedule, kv_lens, page_size: int) -> dict:
         "executed_items": schedule.num_items,
         "page_dmas": live_pages,
         "live_pages": live_pages,
+        "query_rows": int(kv_lens.shape[0]) * int(query_rows),
+        "row_reads": int(kv_lens.sum()) * int(query_rows),
     }
 
 
 def prefix_queue_grid_items(
-    ps: PrefixSchedule, kv_lens, page_size: int
+    ps: PrefixSchedule, kv_lens, page_size: int, *, query_rows: int = 1
 ) -> dict:
     """Work executed by the two-pass shared-prefix schedule on this batch.
 
@@ -615,6 +634,10 @@ def prefix_queue_grid_items(
         "unshared_prefix_page_dmas": unshared_prefix_pages,
         "num_groups": ps.num_groups,
         "grouped_requests": int(np.sum(ps.groups.group_of_req >= 0)),
+        # Multi-row (speculative verify) accounting: see queue_grid_items —
+        # DMAs amortize over the rows, the row counts must not be hidden.
+        "query_rows": int(kv_lens.shape[0]) * int(query_rows),
+        "row_reads": int(kv_lens.sum()) * int(query_rows),
     }
 
 

@@ -141,6 +141,62 @@ def _validate_paged_geometry(
             )
 
 
+def _validate_q_positions(q_positions, b, sq, kv_len, scheduler, q_offset, causal):
+    """Fail fast on the multi-row (speculative-verify) position surface."""
+    if scheduler == "padded":
+        raise NotImplementedError(
+            "q_positions (the multi-row speculative-decode surface) is only "
+            "implemented for scheduler='queue'; the padded (B, W) grid "
+            "derives row positions from kv_len and has no per-row override"
+        )
+    if q_offset is not None:
+        raise ValueError(
+            "pass q_positions or q_offset, not both — q_positions already "
+            "carries every row's absolute position"
+        )
+    if not causal:
+        raise ValueError(
+            "q_positions with causal=False is contradictory: explicit "
+            "per-row positions exist to apply per-row causal masks"
+        )
+    shape = tuple(q_positions.shape)
+    if shape != (b, sq):
+        raise ValueError(
+            f"q_positions must be (B={b}, Sq={sq}) — one absolute position "
+            f"per query token row (heads share their token's position); "
+            f"got {shape}"
+        )
+    # Value checks are host-side only (the serving path always has concrete
+    # positions; traced callers skip, mirroring the kv_len bound check).
+    if isinstance(q_positions, jax.core.Tracer):
+        return
+    arr = np.asarray(q_positions)
+    if arr.size and int(arr.min()) < 0:
+        raise ValueError(
+            f"q_positions must be non-negative; got min {int(arr.min())} "
+            f"(negative rows are the kernels' internal padding convention, "
+            f"not a caller surface)"
+        )
+    if sq > 1 and np.any(np.diff(arr.astype(np.int64), axis=1) <= 0):
+        bad = int(np.argmax(np.any(np.diff(arr, axis=1) <= 0, axis=1)))
+        raise ValueError(
+            f"q_positions must be strictly increasing per request "
+            f"(speculative rows verify in sequence order); request {bad} "
+            f"has {arr[bad].tolist()}"
+        )
+    if not isinstance(kv_len, jax.core.Tracer):
+        lens = np.asarray(kv_len).reshape(-1)
+        over = arr >= lens[:, None]
+        if np.any(over):
+            bad = int(np.argmax(np.any(over, axis=1)))
+            raise ValueError(
+                f"q_positions[{bad}] reaches {int(arr[bad].max())} but "
+                f"kv_len[{bad}]={int(lens[bad])}: every verify row must "
+                f"already have its latent in the cache (append the k rows "
+                f"before attending)"
+            )
+
+
 def mla_decode_paged(
     q: jax.Array,  # (B, Sq, Hq, Dk)
     kv_pages: jax.Array,  # (P, page_size, Dk) physical page pool
@@ -154,6 +210,7 @@ def mla_decode_paged(
     scale: float,
     causal: bool = True,
     q_offset: jax.Array | None = None,
+    q_positions: jax.Array | None = None,
     softcap: float | None = None,
     scheduler: str = "queue",
     block_k: int | None = None,
@@ -208,6 +265,16 @@ def mla_decode_paged(
     maintains both).  Dequantization is fused into the preload pipeline, so
     int8 halves page-DMA bytes at unchanged kernel structure.
 
+    ``q_positions`` (queue scheduler only) is the multi-row speculative
+    surface: explicit per-row absolute positions ``(B, Sq)``, one per query
+    *token* row (heads share their token's position).  It replaces the
+    derived ``kv_len - Sq + arange(Sq)`` ramp — the verify step of
+    draft-verify decode passes each request's k speculative rows here so
+    all k attend the same page fetches with exact per-row causal masks.
+    Positions must be strictly increasing per request (rows verify in
+    sequence order) and inside ``[0, kv_len)``; mutually exclusive with
+    ``q_offset``/``causal=False``.
+
     ``return_partials=True`` (plain queue scheduler only) additionally
     returns the per-row log-sum-exp alongside the output —
     ``(o (B,Sq,Hq,Dv), lse (B,Sq,Hq))`` in the normalized-partial format of
@@ -220,11 +287,17 @@ def mla_decode_paged(
     _validate_paged_geometry(
         q, kv_pages, block_tables, kv_len, block_k, kv_scales, scheduler
     )
+    if q_positions is not None:
+        _validate_q_positions(
+            q_positions, b, sq, kv_len, scheduler, q_offset, causal
+        )
     kv_len = jnp.asarray(kv_len).astype(jnp.int32)
     base = jnp.maximum(kv_len - sq, 0)
     q_pos = base[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
     if q_offset is not None:
         q_pos = q_offset[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+    if q_positions is not None:
+        q_pos = jnp.asarray(q_positions).astype(jnp.int32)
     if not causal:
         cap = block_tables.shape[1] * kv_pages.shape[1]
         q_pos = jnp.full((b, sq), cap, jnp.int32)  # no causal restriction

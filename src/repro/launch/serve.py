@@ -16,6 +16,8 @@ Usage:
         --requests 6 --gen-len 16
     PYTHONPATH=src python -m repro.launch.serve --cache paged --smoke \
         --shared-prefix   # forked system-prompt demo
+    PYTHONPATH=src python -m repro.launch.serve --cache paged --smoke \
+        --speculate ngram --draft-k 4   # draft-verify speculative decode
 
 The paged backend needs an MLA geometry; with no explicit ``--arch`` it
 serves the paper's (``deepseek-v2-mla``), while dense defaults to
@@ -98,6 +100,8 @@ def _build_session(args, cfg, model, params):
             prefix_sharing=args.shared_prefix,
             max_batch=args.batch,
             kv_dtype=args.kv_dtype,
+            speculate=args.speculate,
+            draft_k=args.draft_k,
         )
     if args.cache == "paged":
         return PagedServingSession(
@@ -110,6 +114,8 @@ def _build_session(args, cfg, model, params):
             prefix_sharing=args.shared_prefix,
             max_batch=args.batch,
             kv_dtype=args.kv_dtype,
+            speculate=args.speculate,
+            draft_k=args.draft_k,
         )
     if args.kv_dtype is not None:
         raise SystemExit("--kv-dtype needs --cache paged (dense caches "
@@ -142,6 +148,9 @@ def _serve_stream(sess, pending, gen_len, requests):
                 f"even with an idle session — increase --num-pages/"
                 f"--page-size (paged) or --batch/--max-len (dense)"
             )
+        # Count what the step actually emitted (speculative steps accept a
+        # variable 1..draft_k tokens per request) via output-length deltas.
+        before = {rid: len(sess.outputs[rid]) for rid in live}
         try:
             sess.step()
         except OutOfPagesError:
@@ -158,9 +167,10 @@ def _serve_stream(sess, pending, gen_len, requests):
                 f"{len(out)} tokens: {out[:8]}..."
             )
             continue
-        tokens_out += sum(1 for _ in live)
         for rid in list(live):
-            live[rid] -= 1
+            emitted = len(sess.outputs[rid]) - before[rid]
+            tokens_out += emitted
+            live[rid] -= emitted
             if live[rid] <= 0:
                 out = sess.finish(rid)
                 results[rid] = out
@@ -223,6 +233,14 @@ def main(argv=None):
                     help="paged only: latent-cache storage dtype; int8 "
                     "halves page-DMA bytes (per-row scales, dequant fused "
                     "into the kernel pipeline); default = model dtype")
+    ap.add_argument("--speculate", choices=("off", "ngram"), default="off",
+                    help="paged only: draft-verify speculative decode; "
+                    "'ngram' drafts from each request's own history and "
+                    "verifies draft-k rows per fused step (greedy outputs "
+                    "identical to off — see runtime.serve_loop)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="speculative rows per step (1 pending token + "
+                    "draft-k-1 drafts); >= 2")
     ap.add_argument("--shared-prefix", action="store_true",
                     help="paged only: serve a forked system-prompt family "
                     "with group-batched prefix attention")
@@ -234,6 +252,10 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.speculate != "off" and args.cache != "paged":
+        raise SystemExit("--speculate needs --cache paged (rollback rides "
+                         "the paged pool's refcounted truncate; dense slots "
+                         "have no page bookkeeping to roll back)")
     if args.mesh:
         if args.cache != "paged":
             raise SystemExit("--mesh needs --cache paged (the dense backend "
@@ -293,6 +315,15 @@ def main(argv=None):
             f"({work['page_dma_bytes'] / 1e6:.2f} MB at "
             f"{args.kv_dtype or 'model'} cache dtype)"
         )
+        if args.speculate != "off":
+            print(
+                f"speculative ({args.speculate}, draft_k={args.draft_k}): "
+                f"{work['accepted_tokens']} tokens over "
+                f"{work['request_steps']} request-steps = "
+                f"{work['accepted_tokens_per_step']:.2f} accepted/step; "
+                f"{work['page_dma_bytes_per_accepted_token'] / 1e3:.2f} KB "
+                f"page DMA per accepted token"
+            )
         if args.mesh:
             bal = work["balance"]
             for i, st in enumerate(work["per_shard"]):

@@ -390,9 +390,19 @@ def _paged_logits_at(params, x, idx, *, cfg):
     return lm_logits(params, sel, cfg=cfg, dtype=_cfg_dtype(cfg))
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _paged_logits_all(params, x, *, cfg):
+    """Final norm + unembedding at **every** position: the k-row verify
+    step of speculative decode needs logits for all k rows at once (row j
+    both scores draft j+1 and supplies the bonus token on rejection)."""
+    x = layers.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    return lm_logits(params, x, cfg=cfg, dtype=_cfg_dtype(cfg))
+
+
 def _paged_attend(
     q, cache, layer, bt, kv_len, *, cfg, block_k, schedule, q_offset,
     num_splits, interpret, compute_dtype, variant, head_shards: int = 1,
+    q_positions=None,
 ):
     from repro.kernels import ops
 
@@ -410,6 +420,7 @@ def _paged_attend(
             scale=mla_scale(cfg),
             interpret=interpret,
             q_offset=q_offset,
+            q_positions=q_positions,
             scheduler="queue",
             block_k=block_k,
             num_splits=num_splits,
@@ -510,7 +521,7 @@ def lm_prefill_paged(
 
 def lm_decode_step_paged(
     params,
-    tokens,  # (B, 1) int32 — one new token per live request, rid order
+    tokens,  # (B, S) int32 — S new tokens per live request, rid order
     *,
     cfg,
     cache,  # runtime.kv_cache.LayeredPagedKVCache
@@ -527,15 +538,24 @@ def lm_decode_step_paged(
     compute_dtype=None,
     head_shards: int = 1,
 ) -> jax.Array:
-    """One paged full-model decode step; returns logits ``(B, 1, vocab)``.
+    """One paged full-model decode step; returns logits ``(B, S, vocab)``.
 
     Appends are atomic (OutOfPagesError raised before any page is claimed),
-    then each layer appends its latent row and attends.  The decode
+    then each layer appends its latent row(s) and attends.  The decode
     schedule is built **once per step** — every layer shares the block
     table and kv_len, so one (request, kv_block) work queue serves all L
     attention calls (pass ``scheduler`` to also memoize it across steps;
     its hit/rebuild counters then count steps, not layers — the
     scheduler-stats acceptance check).
+
+    ``S > 1`` is the speculative **verify** step: all S rows (the pending
+    token plus S-1 draft tokens) append, then attend in one fused call with
+    explicit per-row positions (``ops.mla_decode_paged(q_positions=...)``)
+    — the same page DMAs feed S query rows, which is the whole point.
+    Causal masking makes the batched forward exactly the sequential one, so
+    row j's logits are valid whenever drafts 1..j matched greedy; the
+    caller accepts the longest matching prefix and rolls the cache back
+    with ``LayeredPagedKVCache.truncate``.
     """
     from repro.kernels import decode_schedule as _sched
     from repro.kernels import ops
@@ -544,6 +564,14 @@ def lm_decode_step_paged(
     check_paged_compatible(cfg)
     if len(rids) == 0:
         raise ValueError("decode step needs at least one live request")
+    tokens = np.asarray(tokens, np.int32)
+    if tokens.ndim != 2 or tokens.shape[0] != len(rids):
+        raise ValueError(
+            f"tokens must be (B={len(rids)}, S); got {tokens.shape}"
+        )
+    s = int(tokens.shape[1])
+    if s < 1:
+        raise ValueError("decode step needs at least one token per request")
     layers_p = layer_params if layer_params is not None else per_layer_params(
         params, cfg
     )
@@ -551,16 +579,27 @@ def lm_decode_step_paged(
     if block_k is None:
         block_k = ops.default_paged_block_k(cache.page_size, tw)
 
-    positions = np.asarray([cache.seq_len(r) for r in rids], np.int32)
-    need = sum(cache.pages_needed_for_append(r, 1) for r in rids)
+    start = np.asarray([cache.seq_len(r) for r in rids], np.int32)
+    positions = start[:, None] + np.arange(s, dtype=np.int32)[None, :]
+    need = sum(cache.pages_needed_for_append(r, s) for r in rids)
     if need > cache.num_free_pages:
         raise OutOfPagesError(
-            f"decode step needs {need} new pages for {len(rids)} appends; "
-            f"only {cache.num_free_pages} free — evict and retry"
+            f"decode step needs {need} new pages for {len(rids)} appends "
+            f"of {s} row(s); only {cache.num_free_pages} free — evict and "
+            f"retry"
         )
-    plans = [cache.reserve(r, 1) for r in rids]
-    pids = np.asarray([p[0][0] for p in plans], np.int32)
-    offs = np.asarray([p[0][1] for p in plans], np.int32)
+    plans = [cache.reserve(r, s) for r in rids]
+    # Flatten each request's reserve chunks to one (page, offset) per row:
+    # a speculative run of S rows may straddle a page boundary mid-request,
+    # so the scatter write needs per-row destinations.
+    pids = np.empty((len(rids) * s,), np.int32)
+    offs = np.empty((len(rids) * s,), np.int32)
+    w = 0
+    for plan in plans:
+        for pid, off0, m in plan:
+            pids[w : w + m] = pid
+            offs[w : w + m] = off0 + np.arange(m, dtype=np.int32)
+            w += m
     bt, kv_len = cache.block_table(rids, width=tw)
 
     # One schedule per step, shared by all L layers (they see the same
@@ -586,15 +625,24 @@ def lm_decode_step_paged(
 
     bt, kv_len = jnp.asarray(bt), jnp.asarray(kv_len)
     x = _paged_embed(params["embed"], jnp.asarray(tokens, jnp.int32), cfg=cfg)
-    pos = jnp.asarray(positions)[:, None]
+    pos = jnp.asarray(positions)  # (B, S)
+    # S == 1 keeps the derived-position path (bit-identical traces to the
+    # pre-speculation step); S > 1 passes the rows' absolute positions
+    # through the explicit multi-row surface.
+    q_positions = positions if s > 1 else None
     for l, p_l in enumerate(layers_p):
         lat, q = _paged_attn_inputs(p_l, x, pos, cfg=cfg)
-        cache.write_layer_tokens(l, pids, offs, lat[:, 0])
+        cache.write_layer_tokens(
+            l, pids, offs, lat.reshape(len(rids) * s, -1)
+        )
         attn = _paged_attend(
             q, cache, l, bt, kv_len, cfg=cfg, block_k=block_k,
-            schedule=schedule, q_offset=None, num_splits=num_splits,
-            interpret=interpret, compute_dtype=compute_dtype, variant=variant,
+            schedule=schedule, q_offset=None, q_positions=q_positions,
+            num_splits=num_splits, interpret=interpret,
+            compute_dtype=compute_dtype, variant=variant,
             head_shards=head_shards,
         )
         x = _paged_layer_post(p_l, x, attn, cfg=cfg)
-    return _paged_logits_at(params, x, jnp.int32(0), cfg=cfg)
+    if s == 1:
+        return _paged_logits_at(params, x, jnp.int32(0), cfg=cfg)
+    return _paged_logits_all(params, x, cfg=cfg)

@@ -374,6 +374,39 @@ class PagedKVCache:
         self._seq_pages[dst] = list(shared)
         self._seq_len[dst] = prefix_len
 
+    def truncate(self, rid: int, n: int) -> None:
+        """Roll ``rid`` back to its first ``n`` rows (speculative rollback).
+
+        The bookkeeping inverse of an append: ``seq_len`` shrinks to ``n``
+        and every page wholly past the new boundary is released through the
+        refcount — a page still aliased by a fork/COW sibling just loses
+        this request's reference (the sibling's data is untouched); a page
+        owned solely by ``rid`` returns to the free list.  The boundary
+        page (holding row ``n - 1``) always survives, including a private
+        COW copy made for the rows now being rejected — its live prefix
+        rows belong to this request.  Stale rows inside the kept pages are
+        masked by ``kv_len`` and overwritten by the next append, so no
+        device data moves: rollback is exact and O(pages released).
+
+        Truncating to the current length (e.g. a double-truncate after a
+        fully-accepted verify step) is a no-op.  Raises ``KeyError`` for a
+        request that is not live and ``ValueError`` when ``n`` is outside
+        ``[0, seq_len]`` — rollback can only discard rows, never invent
+        them.
+        """
+        cur = self._seq_len[rid]  # KeyError if rid is not live
+        if not 0 <= n <= cur:
+            raise ValueError(
+                f"truncate({rid}, {n}): new length must be in [0, {cur}] "
+                f"(rollback discards tail rows; it cannot extend a request)"
+            )
+        keep = self.pages_needed(n)
+        pages = self._seq_pages[rid]
+        for pid in pages[keep:]:
+            self._release_page(pid)
+        del pages[keep:]
+        self._seq_len[rid] = n
+
     def seq_len(self, rid: int) -> int:
         return self._seq_len[rid]
 
@@ -674,9 +707,12 @@ class LayeredPagedKVCache(PagedKVCache):
             off += m
 
     def write_layer_tokens(self, layer: int, pids, offs, rows) -> None:
-        """Write one row per request into one layer: ``rows (B, W)`` lands
-        at ``(layer, pids[i], offs[i])`` — the decode-step append, batched
-        into a single donated device call per layer.
+        """Scatter ``rows (R, W)`` into one layer at ``(layer, pids[i],
+        offs[i])`` — the decode-step append, batched into a single donated
+        device call per layer.  R is one row per request for a plain step,
+        or ``B * draft_k`` rows for a speculative verify step (each row
+        carries its own page/offset, so a per-request run may cross a page
+        boundary mid-scatter).
         """
         rows = jnp.asarray(rows, self._row_dtype)
         pids = jnp.asarray(pids, jnp.int32)

@@ -194,6 +194,54 @@ class ServingSession:
         return self.outputs.pop(rid)
 
 
+class NGramProposer:
+    """Self-speculative n-gram drafter over a request's own token history.
+
+    ``propose(history, k)`` returns ``k`` draft tokens by suffix matching:
+    for the longest n-gram suffix of ``history`` (``max_n`` down to
+    ``min_n``) it finds the most recent *earlier* occurrence and proposes
+    the ``k`` tokens that followed it.  A continuation shorter than ``k``
+    is padded with its own last token; with no match at all the draft
+    repeats the last history token.  The drafts are free (no model call)
+    and only ever *proposed* — the verify step in
+    :class:`PagedServingSession` keeps greedy decoding exact regardless of
+    draft quality, so a bad draft costs acceptance rate, never
+    correctness.  Any object with the same ``propose(history, k)``
+    signature can replace it (e.g. a small zoo draft model later).
+    """
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        if not 1 <= min_n <= max_n:
+            raise ValueError(
+                f"need 1 <= min_n <= max_n, got min_n={min_n} max_n={max_n}"
+            )
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def propose(self, history, k: int) -> list[int]:
+        if k < 1:
+            raise ValueError(f"propose needs k >= 1 draft tokens, got {k}")
+        hist = list(map(int, history))
+        if not hist:
+            return [0] * k
+        best: list[int] = []
+        for n in range(min(self.max_n, len(hist) - 1), self.min_n - 1, -1):
+            suffix = hist[-n:]
+            # Scan most-recent-first: recency tracks the current decoding
+            # loop better than the global mode does, and the first match
+            # with a full k-token continuation short-circuits the scan.
+            for i in range(len(hist) - n - 1, -1, -1):
+                if hist[i : i + n] == suffix:
+                    cont = hist[i + n : i + n + k]
+                    if len(cont) == k:
+                        return cont
+                    if len(cont) > len(best):
+                        best = cont
+        if best:
+            return best + [best[-1]] * (k - len(best))
+        return [hist[-1]] * k
+
+
 class PagedServingSession:
     """Full-model serving over the paged cache backend.
 
@@ -222,7 +270,18 @@ class PagedServingSession:
     * the cache storage dtype is a serving knob (``kv_dtype="int8"``):
       quantized pools halve page-DMA bytes with dequant fused into the
       kernel pipeline, and :meth:`work_stats` reports the dtype-aware
-      ``page_dma_bytes`` proxy.
+      ``page_dma_bytes`` proxy;
+    * ``speculate="ngram"`` turns each step into a draft-verify step:
+      a :class:`NGramProposer` (pluggable via ``draft_proposer``) drafts
+      ``draft_k - 1`` tokens from the request's own history, the model
+      verifies all ``draft_k`` rows in **one** fused multi-row decode
+      (same page DMAs as a 1-row step — the GEMV becomes a GEMM), the
+      longest draft prefix matching the model's own greedy choices is
+      accepted, and rejected tail rows roll back exactly via
+      :meth:`~repro.runtime.kv_cache.LayeredPagedKVCache.truncate`.
+      Greedy outputs are token-for-token identical to ``speculate="off"``
+      — speculation changes the *cost* per emitted token, never the
+      tokens.
     """
 
     def __init__(
@@ -243,6 +302,9 @@ class PagedServingSession:
         kv_dtype=None,
         device=None,
         head_shards: int = 1,
+        speculate: str = "off",
+        draft_k: int = 4,
+        draft_proposer=None,
     ):
         from repro.kernels import ops
         from repro.kernels.decode_schedule import DecodeScheduler
@@ -306,6 +368,27 @@ class PagedServingSession:
             block_k=self.block_k, num_splits=num_splits, min_group=min_group
         )
         self._layers = _tf.per_layer_params(params, model.cfg)
+        if speculate not in ("off", "ngram"):
+            raise ValueError(
+                f"speculate={speculate!r} is not a draft policy; pick 'off' "
+                "or 'ngram' (or pass a custom draft_proposer with ngram)"
+            )
+        if speculate != "off" and draft_k < 2:
+            raise ValueError(
+                f"draft_k={draft_k} buys nothing: a speculative step "
+                "verifies 1 pending + (draft_k - 1) draft rows, so "
+                "draft_k >= 2 is the smallest step that amortizes anything "
+                "(use speculate='off' for plain 1-row decode)"
+            )
+        self.speculate = speculate
+        self.draft_k = int(draft_k)
+        self._proposer = draft_proposer or (
+            NGramProposer() if speculate != "off" else None
+        )
+        # Token history per request (prompt + emitted) feeds the drafter;
+        # kept even with speculation off so fork/admit_with_prefix children
+        # inherit a correct history if a later session turns drafting on.
+        self._prompt: dict[int, list[int]] = {}
         self.active: list[int] = []
         self.outputs: dict[int, list[int]] = {}
         self.last_token: dict[int, int] = {}
@@ -313,7 +396,15 @@ class PagedServingSession:
         self._prefill_shapes: set[tuple] = set()
         self._decode_shapes: set[int] = set()
         # Deterministic work counters (benchmarks / regression proxies).
+        # ``request_steps``/``query_rows``/``accepted_tokens`` keep the
+        # per-token proxies honest under speculation: a k-row verify step
+        # counts k query rows but only the accepted prefix as tokens, so
+        # page_dma_bytes_per_accepted_token can't be gamed by drafting
+        # rows that get rejected.
         self.decode_steps = 0
+        self.request_steps = 0
+        self.query_rows = 0
+        self.accepted_tokens = 0
         self.page_dmas = 0
         self.rows_attended = 0
 
@@ -344,13 +435,28 @@ class PagedServingSession:
         times the storage bytes one page moves (int8 pages include their
         fp32 scale strip) — the number the cache-dtype choice actually
         changes, where the raw DMA *count* does not.
+
+        Speculation accounting: ``request_steps`` counts per-request
+        decode launches, ``query_rows`` the fused rows those launches
+        verified, ``accepted_tokens`` only the rows that became output.
+        ``accepted_tokens_per_step`` is exactly 1.0 with speculation off;
+        ``page_dma_bytes_per_accepted_token`` is the amortization headline
+        — rejected draft rows inflate ``query_rows`` but never shrink it.
         """
+        page_dma_bytes = self.page_dmas * self.cache_spec.bytes_per_page(
+            self.cache.page_size, self.cache.width
+        )
         return {
             "decode_steps": self.decode_steps,
+            "request_steps": self.request_steps,
+            "query_rows": self.query_rows,
+            "accepted_tokens": self.accepted_tokens,
+            "accepted_tokens_per_step": self.accepted_tokens
+            / max(self.request_steps, 1),
             "page_dmas": self.page_dmas,
-            "page_dma_bytes": self.page_dmas * self.cache_spec.bytes_per_page(
-                self.cache.page_size, self.cache.width
-            ),
+            "page_dma_bytes": page_dma_bytes,
+            "page_dma_bytes_per_accepted_token": page_dma_bytes
+            / max(self.accepted_tokens, 1),
             "rows_attended": self.rows_attended,
             "aliased_pages": self.cache.num_aliased_pages(),
             "free_pages": self.cache.num_free_pages,
@@ -404,6 +510,7 @@ class PagedServingSession:
             compute_dtype=self.compute_dtype,
             head_shards=self.head_shards,
         )
+        self._prompt[rid] = prompt
         return self._admit(rid, int(jnp.argmax(logits[0])))
 
     def fork(self, rid: int, prefix_len: int | None = None) -> int:
@@ -427,6 +534,7 @@ class PagedServingSession:
         self.active.append(child)
         self.outputs[child] = list(self.outputs[rid])
         self.last_token[child] = self.last_token[rid]
+        self._prompt[child] = list(self._prompt[rid])
         return child
 
     def admit_with_prefix(
@@ -457,6 +565,12 @@ class PagedServingSession:
             self.cache.free(child)
             return None
         start = self.cache.seq_len(child)
+        # The child's draft history is the parent's cached token rows up to
+        # the shared prefix plus its own suffix.  Parent rows = prompt +
+        # outputs[:-1] (the last output is the pending token, not yet a
+        # cache row).
+        ctx = (self._prompt[parent_rid] + self.outputs[parent_rid])[:-1]
+        self._prompt[child] = ctx[:start] + suffix
         self._prefill_shapes.add((1, self.prefill_chunk))
         logits = _tf.lm_prefill_paged(
             self.params,
@@ -477,7 +591,21 @@ class PagedServingSession:
 
     # -- decode --------------------------------------------------------- #
     def step(self) -> None:
-        """One greedy decode step for every live request (one schedule)."""
+        """One greedy decode step for every live request (one schedule).
+
+        With ``speculate="off"`` this feeds each request's pending token
+        through a 1-row decode and emits its greedy successor.  With
+        ``speculate="ngram"`` it is a draft-verify step: feed ``[pending,
+        d_1 .. d_{k-1}]`` (drafts from the proposer), run **one** fused
+        k-row decode, take the model's greedy choice at every row, and
+        accept the longest draft prefix that matches those choices — the
+        accepted rows' logits are exactly what sequential 1-row decode
+        would have produced (causal masking conditions row i only on rows
+        < i), so between 1 and k tokens are emitted per step and the
+        stream is token-for-token identical to non-speculative decode.
+        Rejected tail rows (already appended to the cache so the kernel
+        could attend them) roll back via ``cache.truncate``.
+        """
         from repro.kernels.decode_schedule import (
             PrefixSchedule,
             prefix_queue_grid_items,
@@ -488,9 +616,29 @@ class PagedServingSession:
         rids = list(self.active)
         if not rids:
             return
-        tokens = np.asarray(
-            [self.last_token[r] for r in rids], np.int32
-        )[:, None]
+        s = self.draft_k if self.speculate != "off" else 1
+        if s > 1:
+            drafts = [
+                self._proposer.propose(
+                    self._prompt[r] + self.outputs[r], s - 1
+                )
+                for r in rids
+            ]
+            tokens = np.asarray(
+                [
+                    [self.last_token[r]] + list(map(int, d))
+                    for r, d in zip(rids, drafts)
+                ],
+                np.int32,
+            )
+        else:
+            drafts = [[] for _ in rids]
+            tokens = np.asarray(
+                [self.last_token[r] for r in rids], np.int32
+            )[:, None]
+        # Pre-append lengths: truncation targets and accounting both need
+        # the lengths the *schedule* saw, not the post-rollback ones.
+        pre = {r: self.cache.seq_len(r) for r in rids}
         logits = _tf.lm_decode_step_paged(
             self.params,
             tokens,
@@ -508,24 +656,45 @@ class PagedServingSession:
             compute_dtype=self.compute_dtype,
             head_shards=self.head_shards,
         )
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # (B, s)
         for i, r in enumerate(rids):
-            self.outputs[r].append(int(nxt[i]))
-            self.last_token[r] = int(nxt[i])
+            # Accept the longest prefix where draft d_{m+1} equals the
+            # model's greedy pick after row m; emit m+1 tokens (the first
+            # greedy pick is always emitted — a fully rejected draft still
+            # makes the same progress a non-speculative step would).
+            m = 0
+            while m < s - 1 and int(drafts[i][m]) == int(greedy[i, m]):
+                m += 1
+            emitted = [int(t) for t in greedy[i, : m + 1]]
+            self.outputs[r].extend(emitted)
+            self.last_token[r] = emitted[-1]
+            if m + 1 < s:
+                # Roll back rejected draft rows: keep the pending token's
+                # row plus the m accepted draft rows.
+                self.cache.truncate(r, pre[r] + 1 + m)
+            self.accepted_tokens += m + 1
         # Deterministic work accounting: the schedule the step just used,
-        # scaled by L (every layer replays the same queue).
+        # scaled by L (every layer replays the same queue).  kv is the
+        # schedule-time length (pre + s appended rows) — rollback refunds
+        # pages, not the DMAs this step already counted.
         self.decode_steps += 1
+        self.request_steps += len(rids)
+        self.query_rows += len(rids) * s
         self._decode_shapes.add(len(rids))
         sched = self._scheduler.current
-        kv = np.asarray([self.cache.seq_len(r) for r in rids], np.int64)
+        kv = np.asarray([pre[r] + s for r in rids], np.int64)
         acct = (
-            prefix_queue_grid_items(sched, kv, self.cache.page_size)
+            prefix_queue_grid_items(
+                sched, kv, self.cache.page_size, query_rows=s
+            )
             if isinstance(sched, PrefixSchedule)
-            else queue_grid_items(sched, kv, self.cache.page_size)
+            else queue_grid_items(
+                sched, kv, self.cache.page_size, query_rows=s
+            )
         )
         n_layers = self.cfg.n_layers
         self.page_dmas += int(acct["page_dmas"]) * n_layers
-        self.rows_attended += int(kv.sum()) * n_layers
+        self.rows_attended += int(kv.sum()) * s * n_layers
 
     def finish(self, rid: int) -> list[int]:
         """Retire ``rid``: pages return to the pool (aliased prefix pages
@@ -535,6 +704,7 @@ class PagedServingSession:
         self.active.remove(rid)
         self.cache.free(rid)
         self.last_token.pop(rid, None)
+        self._prompt.pop(rid, None)
         return self.outputs.pop(rid)
 
 
@@ -592,6 +762,9 @@ class ShardedPagedServingSession:
         interpret: bool | None = None,
         dtype=None,
         kv_dtype=None,
+        speculate: str = "off",
+        draft_k: int = 4,
+        draft_proposer=None,
     ):
         if mesh is not None and shards is not None:
             raise ValueError("pass mesh= or shards=, not both")
@@ -630,6 +803,12 @@ class ShardedPagedServingSession:
                 kv_dtype=kv_dtype,
                 device=dev,
                 head_shards=self.head_shards,
+                # Speculation is shard-local: each shard drafts/verifies/
+                # rolls back its own requests, so sharded greedy output
+                # stays bit-identical to a single-host session.
+                speculate=speculate,
+                draft_k=draft_k,
+                draft_proposer=draft_proposer,
             )
             for dev in devices
         ]
@@ -769,6 +948,9 @@ class ShardedPagedServingSession:
             k: sum(st[k] for st in per_shard)
             for k in (
                 "decode_steps",
+                "request_steps",
+                "query_rows",
+                "accepted_tokens",
                 "page_dmas",
                 "page_dma_bytes",
                 "rows_attended",
@@ -776,6 +958,14 @@ class ShardedPagedServingSession:
                 "free_pages",
             )
         }
+        # Ratios recompute from the summed raw counters — averaging the
+        # per-shard ratios would weight empty shards equally with busy ones.
+        agg["accepted_tokens_per_step"] = agg["accepted_tokens"] / max(
+            agg["request_steps"], 1
+        )
+        agg["page_dma_bytes_per_accepted_token"] = agg[
+            "page_dma_bytes"
+        ] / max(agg["accepted_tokens"], 1)
         agg["per_shard"] = per_shard
         agg["balance"] = shard_work_balance(
             [st["page_dmas"] for st in per_shard]

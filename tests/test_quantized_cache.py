@@ -238,6 +238,50 @@ def test_refcounts_and_free_unchanged_by_quantization():
     assert kv.num_free_pages == 6
 
 
+def test_truncate_int8_reappend_matches_never_speculated_twin():
+    """Speculative rollback on a quantized pool: append draft rows,
+    truncate the rejected tail, re-append the real tokens — the stored
+    int8 rows AND their scales must match a twin pool that never
+    speculated bit for bit (per-row symmetric quantization is positional
+    only through the page layout, which truncate restores exactly)."""
+    base, spec, real = rows(6, 16, 20), rows(3, 16, 21), rows(3, 16, 22)
+    kv = make_int8(num_pages=8, page_size=4)
+    kv.alloc(0)
+    kv.append(0, base)
+    kv.append(0, spec)  # 3 draft rows land
+    kv.truncate(0, 7)  # accept 1 of 3
+    kv.append(0, real)
+    twin = make_int8(num_pages=8, page_size=4)
+    twin.alloc(0)
+    twin.append(0, base)
+    twin.append(0, spec[:1])
+    twin.append(0, real)
+    assert kv.seq_len(0) == twin.seq_len(0) == 10
+    np.testing.assert_array_equal(
+        np.asarray(kv.gather_contiguous(0)),
+        np.asarray(twin.gather_contiguous(0)),
+    )
+
+
+def test_truncate_int8_forked_child_rollback_preserves_parent():
+    """Rolling a forked child's speculation back must leave the parent's
+    quantized rows and scales untouched (the COW boundary copy absorbs the
+    rejected writes) and restore the child to the shared prefix."""
+    kv = make_int8(num_pages=8, page_size=4)
+    base = rows(6, 16, 23)
+    kv.alloc(0)
+    kv.append(0, base)
+    before = np.asarray(kv.gather_contiguous(0)).copy()
+    kv.fork(0, 1)
+    kv.append(1, rows(4, 16, 24))  # COW on the boundary page + a tail page
+    kv.truncate(1, 6)  # reject everything
+    np.testing.assert_array_equal(np.asarray(kv.gather_contiguous(0)), before)
+    np.testing.assert_array_equal(np.asarray(kv.gather_contiguous(1)), before)
+    kv.free(1)
+    kv.free(0)
+    assert kv.num_free_pages == 8
+
+
 # --------------------------------------------------------------------------- #
 # fused-dequant kernel parity (ISSUE-5 acceptance: <= 3e-2 combined)
 # --------------------------------------------------------------------------- #
