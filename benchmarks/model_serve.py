@@ -342,6 +342,82 @@ def _speculative_scenario(cfg, model, params, g, *, draft_k: int = 4) -> dict:
     }
 
 
+def _failure_recovery_scenario(cfg, model, params, g, *, shards: int = 2) -> dict:
+    """Chaos row: seeded shard loss mid-stream vs the fault-free run.
+
+    The same ragged stream runs twice through two-logical-shard sessions
+    under :class:`~repro.runtime.serve_loop.ServeSupervisor` — once
+    fault-free, once with a :class:`~repro.runtime.fault_injection
+    .FaultPlan` that kills shard 1 halfway through.  Every victim must be
+    suspended, re-routed to the survivor, replayed, and complete with the
+    exact tokens of the fault-free run: gates ``completed_fraction ==
+    1.0`` and ``greedy_match_vs_nofault == 1.0`` (plus a zero-leak
+    host-mirror refcount sweep and zero replay mismatches).  The cost of
+    recovery is the reported ``replay_token_overhead`` — replayed prefill
+    tokens per generated token.
+    """
+    from repro.runtime.fault_injection import FaultEvent, FaultPlan
+    from repro.runtime.serve_loop import ServeSupervisor
+
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(2, cfg.vocab_size, size=n).tolist() for n in g["prompts"]
+    ]
+    gen_len = g["steps"]
+    plan = FaultPlan(
+        [FaultEvent(step=max(2, g["steps"] // 2), kind="shard_loss", shard=1)]
+    )
+
+    def _run(active_plan):
+        sess = ShardedPagedServingSession(
+            model, params, num_pages=g["num_pages"], shards=shards,
+            page_size=g["page"], block_k=g["block_k"],
+            prefill_chunk=g["chunk"],
+        )
+        sup = ServeSupervisor(sess, gen_len=gen_len, plan=active_plan)
+        for p in prompts:
+            sup.submit(p)
+        t0 = time.perf_counter()
+        results = sup.run()
+        jax.block_until_ready([s.cache.pages for s in sess.shards])
+        dt = time.perf_counter() - t0
+        return sess, sup, results, dt
+
+    _, _, base, dt_base = _run(None)
+    sess, sup, faulted, dt_fault = _run(plan)
+    stats = sup.stats()
+    completed = sum(
+        i not in sup.abandoned_idx and len(faulted.get(i, [])) >= gen_len
+        for i in range(len(prompts))
+    )
+    matches = sum(base[i] == faulted[i] for i in base if i in faulted)
+    leaked = 0
+    for s in sess.shards:
+        sweep = s.cache.refcount_sweep()  # raises on refcount divergence
+        leaked += sweep["live_pages"]
+    work = sess.work_stats()
+    toks = stats["tokens_out"]
+    return {
+        "requests": len(prompts),
+        "num_shards": shards,
+        "decode_steps": work["decode_steps"],
+        "supervised_steps": stats["steps"],
+        "tokens_per_s_paged": toks / max(dt_fault, 1e-9),
+        "tokens_per_s_nofault": toks / max(dt_base, 1e-9),
+        "page_dmas_paged": work["page_dmas"],
+        "page_dma_bytes_paged": work["page_dma_bytes"],
+        "schedule_rebuilds": sess.scheduler_stats["rebuilds"],
+        "completed_fraction": completed / len(prompts),
+        "greedy_match_vs_nofault": matches / len(prompts),
+        "suspends": stats["suspends"],
+        "resumes": stats["resumes"],
+        "replay_mismatches": stats["replay_mismatches"],
+        "replay_prefill_tokens": stats["replay_prefill_tokens"],
+        "replay_token_overhead": stats["replay_prefill_tokens"] / max(toks, 1),
+        "leaked_pages": leaked,
+    }
+
+
 def run(full: bool = False, smoke: bool = False) -> dict:
     tier = "full" if full else ("smoke" if smoke else "default")
     mode = "tpu" if _on_tpu() else "cpu-interpret"
@@ -368,6 +444,11 @@ def run(full: bool = False, smoke: bool = False) -> dict:
     for k, v in sorted(sp.items()):
         val = f"{v:.2f}" if isinstance(v, float) else v
         print(f"model_serve,speculative,{k},{val}")
+    fr = _failure_recovery_scenario(cfg, model, params, g)
+    report["scenarios"]["failure_recovery"] = fr
+    for k, v in sorted(fr.items()):
+        val = f"{v:.2f}" if isinstance(v, float) else v
+        print(f"model_serve,failure_recovery,{k},{val}")
     rag = report["scenarios"]["ragged"]
     print(
         f"model_serve,summary,read_reduction_vs_dense,"
@@ -402,6 +483,19 @@ def run(full: bool = False, smoke: bool = False) -> dict:
         f"{sp['accepted_tokens_per_step']:.2f},greedy_match,"
         f"{sp['greedy_match_vs_off']:.2f},dma_per_token_vs_off,"
         f"{sp['dma_per_token_vs_off']:.2f},pass,{int(spec_ok)}"
+    )
+    fr_ok = (
+        fr["completed_fraction"] == 1.0
+        and fr["greedy_match_vs_nofault"] == 1.0
+        and fr["replay_mismatches"] == 0
+        and fr["leaked_pages"] == 0
+        and fr["suspends"] >= 1  # the injected loss must actually bite
+    )
+    print(
+        f"model_serve,acceptance_failure_recovery,completed,"
+        f"{fr['completed_fraction']:.2f},greedy_match,"
+        f"{fr['greedy_match_vs_nofault']:.2f},replay_token_overhead,"
+        f"{fr['replay_token_overhead']:.2f},pass,{int(fr_ok)}"
     )
     return report
 

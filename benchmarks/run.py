@@ -122,6 +122,11 @@ def _summarize(report: dict) -> dict:
                 "page_dma_bytes_per_accepted_token",
                 "greedy_match_vs_off",
                 "dma_per_token_vs_off",
+                "completed_fraction",
+                "greedy_match_vs_nofault",
+                "replay_token_overhead",
+                "replay_mismatches",
+                "leaked_pages",
             ))
     return out
 
@@ -249,6 +254,12 @@ def check_regression(report: dict, baseline_path: str, tol: float) -> list:
         ("model_serve", "page_dma_bytes_per_accepted_token", True, not on_tpu),
         ("model_serve", "dma_per_token_vs_off", False, not on_tpu),
         ("model_serve", "greedy_match_vs_off", False, not on_tpu),
+        # [MODEL-SERVE] failure_recovery row: completion and greedy parity
+        # under a seeded shard loss are deterministic; replay overhead is
+        # the recovery cost (lower is better — more overhead = regression).
+        ("model_serve", "completed_fraction", False, not on_tpu),
+        ("model_serve", "greedy_match_vs_nofault", False, not on_tpu),
+        ("model_serve", "replay_token_overhead", True, not on_tpu),
     ]
     for section_key, metric, lower_better, gated in checks:
         for name, res in report.get(section_key, {}).items():
@@ -288,6 +299,12 @@ ABSOLUTE_FLOORS = [
     ("model_serve", "speculative", "accepted_tokens_per_step", 1.0),
     ("model_serve", "speculative", "greedy_match_vs_off", 1.0),
     ("model_serve", "speculative", "dma_per_token_vs_off", 1.0),
+    # Fault tolerance is pass/fail, never relative: after a seeded shard
+    # loss every request must complete (1.0), with tokens bit-identical to
+    # the fault-free run (1.0).  A baseline refresh must not be able to
+    # ratchet either below exact.
+    ("model_serve", "failure_recovery", "completed_fraction", 1.0),
+    ("model_serve", "failure_recovery", "greedy_match_vs_nofault", 1.0),
 ]
 
 

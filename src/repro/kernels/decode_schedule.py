@@ -646,7 +646,9 @@ def prefix_queue_grid_items(
 # --------------------------------------------------------------------------- #
 
 
-def route_request(shard_live_blocks, shard_free_pages, pages_needed: int):
+def route_request(
+    shard_live_blocks, shard_free_pages, pages_needed: int, shard_ok=None
+):
     """Pick the data shard to admit a new request onto.
 
     ``shard_live_blocks[i]`` is shard i's current decode work proxy (sum of
@@ -656,11 +658,17 @@ def route_request(shard_live_blocks, shard_free_pages, pages_needed: int):
     count; break ties toward more free pages, then the lowest index (so
     an empty fleet fills deterministically shard 0, 1, ...).
 
+    ``shard_ok[i]`` (optional) masks admissibility: draining shards finish
+    their live requests but take no new ones, dead shards take nothing —
+    the shard lifecycle passes ``health == "healthy"`` here.
+
     Returns the shard index, or None when no shard has room (caller evicts
     or defers).
     """
     best = None
     for i, (blocks, free) in enumerate(zip(shard_live_blocks, shard_free_pages)):
+        if shard_ok is not None and not shard_ok[i]:
+            continue
         if free < pages_needed:
             continue
         key = (int(blocks), -int(free), i)

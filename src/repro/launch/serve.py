@@ -181,6 +181,95 @@ def _serve_stream(sess, pending, gen_len, requests):
     return results, tokens_out, dt
 
 
+def _serve_supervised(sess, pending, args):
+    """Chaos / deadline serving: the supervised loop over the same stream.
+
+    Builds a seeded :class:`FaultPlan` when ``--chaos`` is given (shard
+    loss only materializes on a sharded session; generated plans never
+    abandon, so every request must still complete) and runs the stream
+    through :class:`ServeSupervisor` — recoverable eviction/replay,
+    re-routing, admission backoff, straggler tracking.  Exits nonzero if
+    any request is lost or any replay diverges: the chaos smoke in CI
+    gates on this.
+    """
+    from repro.runtime.fault_injection import FaultPlan
+    from repro.runtime.serve_loop import ServeSupervisor
+
+    plan = None
+    if args.chaos is not None:
+        sharded = hasattr(sess, "shards")
+        pool = (
+            sess._pages_per_shard if sharded else sess.cache.num_pages
+        )
+        plan = FaultPlan.generate(
+            args.chaos,
+            num_shards=sess.num_shards if sharded else 1,
+            horizon=max(2, args.gen_len),
+            pool_pages=pool,
+        )
+        print(f"chaos plan (seed {args.chaos}): {plan.describe()}")
+    sup = ServeSupervisor(
+        sess, gen_len=args.gen_len, deadline=args.deadline, plan=plan
+    )
+    for prompt in pending:
+        sup.submit(prompt)
+    t0 = time.time()
+    results = sup.run()
+    dt = time.time() - t0
+    stats = sup.stats()
+    tokens_out = stats["tokens_out"]
+    for idx in sorted(results):
+        tag = "abandoned" if idx in sup.abandoned_idx else "done"
+        out = results[idx]
+        print(f"request {idx} {tag}: {len(out)} tokens: {out[:8]}...")
+    print(
+        f"served {len(results)}/{args.requests} requests, {tokens_out} "
+        f"decode tokens in {dt:.1f}s ({tokens_out / max(dt, 1e-9):.1f} "
+        f"tok/s) over {stats['steps']} supervised steps"
+    )
+    print(
+        f"supervision: {stats['faults_applied']} faults applied "
+        f"({stats['faults_skipped']} skipped), {stats['suspends']} "
+        f"suspends / {stats['resumes']} resumes, "
+        f"{stats['replay_prefill_tokens']} replay prefill tokens, "
+        f"{stats['evictions']} pool evictions, "
+        f"{stats['admission_retries']} admission retries, "
+        f"{stats['straggler_events']} straggler events, "
+        f"{stats['abandoned']} abandoned"
+    )
+    if hasattr(sess, "shard_health"):
+        print(f"shard health: {sess.shard_health}")
+    for event in sup.events:
+        print(f"  {event}")
+    # Leak audit: after the stream drains, every shard pool must be empty.
+    caches = (
+        [s.cache for s in sess.shards]
+        if hasattr(sess, "shards")
+        else [sess.cache]
+    )
+    for i, cache in enumerate(caches):
+        sweep = cache.refcount_sweep()
+        if sweep["live_sequences"] or sweep["live_pages"]:
+            raise SystemExit(
+                f"page leak on shard {i} after drain: {sweep}"
+            )
+    if len(results) != args.requests:
+        raise SystemExit(
+            f"lost requests: {args.requests - len(results)} of "
+            f"{args.requests} never completed"
+        )
+    if stats["replay_mismatches"]:
+        raise SystemExit(
+            f"{stats['replay_mismatches']} replay(s) diverged from the "
+            "original stream (suspend/resume is supposed to be exact)"
+        )
+    if stats["abandoned"] and args.deadline is None:
+        raise SystemExit(
+            f"{stats['abandoned']} request(s) abandoned without a "
+            "--deadline: a generated chaos plan must complete everything"
+        )
+
+
 def _shared_prefix_demo(sess, cfg, seed, gen_len):
     """Forked system-prompt traffic: one parent, aliased children."""
     rng = np.random.default_rng(seed)
@@ -249,9 +338,24 @@ def main(argv=None):
                     "the page pool + decode queue over D data shards with "
                     "M-way tensor-parallel heads each (CPU hosts get the "
                     "devices forced via XLA_FLAGS automatically)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="paged only: run the supervised serve loop under a "
+                    "seeded FaultPlan (shard loss / slow shard / pool "
+                    "pressure); every request must still complete with its "
+                    "exact greedy output or the run exits nonzero")
+    ap.add_argument("--deadline", type=int, default=None, metavar="STEPS",
+                    help="paged only: per-request decode-step deadline; "
+                    "over-deadline requests are abandoned with their "
+                    "partial output (implies the supervised loop)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if (args.chaos is not None or args.deadline is not None) and (
+        args.cache != "paged"
+    ):
+        raise SystemExit("--chaos/--deadline need --cache paged (recoverable "
+                         "eviction/replay rides the paged pool's refcounted "
+                         "free + chunked re-prefill)")
     if args.speculate != "off" and args.cache != "paged":
         raise SystemExit("--speculate needs --cache paged (rollback rides "
                          "the paged pool's refcounted truncate; dense slots "
@@ -297,6 +401,9 @@ def main(argv=None):
         rng.integers(2, cfg.vocab_size, size=int(rng.integers(4, 24))).tolist()
         for _ in range(args.requests)
     ]
+    if args.chaos is not None or args.deadline is not None:
+        _serve_supervised(sess, pending, args)
+        return
     _, tokens_out, dt = _serve_stream(sess, pending, args.gen_len, args.requests)
     print(
         f"served {args.requests} requests, {tokens_out} decode tokens "

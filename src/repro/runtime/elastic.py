@@ -26,6 +26,18 @@ def reshard_tree(tree, new_mesh, spec_fn):
     return jax.tree_util.tree_map_with_path(move, tree)
 
 
+def serving_params_replica(params, device=None):
+    """Place a full params replica for a freshly attached serving shard.
+
+    Serving data-parallelism replicates params per shard (each shard runs
+    the whole model over its own requests), so elastic grow is a plain
+    host-staged copy onto the new shard's device — no spec re-evaluation.
+    ``device=None`` keeps the default placement (single-device / CPU test
+    meshes), matching how the original shards were built.
+    """
+    return sharding.shard_put(params, device)
+
+
 def reshard_train_state(params, opt_state, old_mesh, new_mesh, *, multi_pod=False):
     del old_mesh
     pfn = sharding.param_spec_fn(new_mesh, multi_pod=multi_pod)

@@ -31,6 +31,11 @@ class StragglerMonitor:
         is_straggler = duration > self.threshold * self.ewma
         if is_straggler:
             self.events.append((step, duration, self.ewma))
+            # Do NOT fold the flagged duration into the EWMA: the baseline
+            # models *healthy* step time, and absorbing outliers inflates
+            # it until a sustained straggler burst stops being flagged at
+            # all — exactly when detection matters most.
+            return True
         self.ewma = (1 - self.alpha) * self.ewma + self.alpha * duration
         return is_straggler
 
@@ -84,6 +89,10 @@ class TrainingSupervisor:
                 rs, restored = self.ckpt.restore_latest(state)
                 if rs is not None:
                     state, step = restored, rs
+                    # Rolled-back steps will be replayed: drop their history
+                    # entries or every replay appends duplicate (step,
+                    # metrics) pairs for the same step.
+                    history = [h for h in history if h[0] < step]
                 continue
             retries = 0
             self.straggler.observe(step, time.perf_counter() - t0)

@@ -424,6 +424,45 @@ class PagedKVCache:
         """Physical pages currently shared by more than one request."""
         return int(np.sum(self._ref > 1))
 
+    def refcount_sweep(self) -> dict:
+        """Audit the host-mirror accounting; raises AssertionError on a leak.
+
+        Recomputes every page's expected refcount from the sequence tables
+        and cross-checks the ``_ref`` array and the free list.  Any
+        divergence — a leaked page (freed sequence still pinning it), a
+        double-free (live page on the free list), a duplicated free-list
+        entry — is an assertion failure naming the page.  The chaos tests
+        run this after every suspend/replay storm: "no pool pages leak"
+        is gated here, not inferred from ``num_free_pages``.
+        """
+        expected = np.zeros(self.num_pages, dtype=np.int64)
+        for rid, pages in self._seq_pages.items():
+            for pid in pages:
+                expected[pid] += 1
+        bad = np.nonzero(expected != self._ref)[0]
+        assert bad.size == 0, (
+            f"refcount mismatch on pages {bad.tolist()[:8]}: "
+            f"expected {expected[bad].tolist()[:8]} owners from the "
+            f"sequence tables, _ref says {self._ref[bad].tolist()[:8]}"
+        )
+        free = list(self._free)
+        free_set = set(free)
+        assert len(free) == len(free_set), (
+            f"free list holds {len(free) - len(free_set)} duplicate entries"
+        )
+        should_be_free = {int(p) for p in np.nonzero(expected == 0)[0]}
+        assert free_set == should_be_free, (
+            f"free list out of sync: {sorted(free_set - should_be_free)[:8]} "
+            f"free but owned, {sorted(should_be_free - free_set)[:8]} "
+            f"unowned but not free (leaked)"
+        )
+        return {
+            "live_pages": int(np.sum(expected > 0)),
+            "free_pages": len(free),
+            "aliased_pages": int(np.sum(expected > 1)),
+            "live_sequences": len(self._seq_pages),
+        }
+
     # ------------------------------------------------------------------ #
     # data path
     # ------------------------------------------------------------------ #

@@ -8,6 +8,9 @@ when divisible (decode_32k: 128/16), else sequence-parallel split-KV over
 
 from __future__ import annotations
 
+import dataclasses
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -242,6 +245,33 @@ class NGramProposer:
         return [hist[-1]] * k
 
 
+@dataclasses.dataclass
+class SuspendedRequest:
+    """Host-side survival kit of a suspended request.
+
+    Everything :meth:`PagedServingSession.resume` needs to rebuild the
+    device state by replay: the prompt, the emitted tokens, and (for a
+    forked child) which parent it branched from and how many rows the
+    shared prefix covered.  ``outputs`` is the request's *live* list
+    object, not a copy — sharded-session output views alias it, so they
+    stay current across suspend/resume hops (including cross-shard
+    re-routes off a dead shard).
+    """
+
+    prompt: list[int]
+    outputs: list[int]
+    parent: int | None = None
+    prefix_len: int = 0
+
+    @property
+    def tokens(self) -> list[int]:
+        """Cache rows replay must rebuild: prompt + emitted minus the
+        pending token (``outputs[-1]`` is not a cache row yet — between
+        steps the paged session keeps rows = prompt + outputs[:-1], and
+        speculative rollback already restored that invariant)."""
+        return self.prompt + self.outputs[:-1]
+
+
 class PagedServingSession:
     """Full-model serving over the paged cache backend.
 
@@ -407,6 +437,17 @@ class PagedServingSession:
         self.accepted_tokens = 0
         self.page_dmas = 0
         self.rows_attended = 0
+        # Recoverable eviction (suspend/resume by replay) + chaos state.
+        # ``_family`` maps a forked child to (parent rid, shared rows) so
+        # suspend records the alias point and resume can re-alias it.
+        self.suspended: dict[int, SuspendedRequest] = {}
+        self._family: dict[int, tuple[int, int]] = {}
+        self._ballast: set[int] = set()
+        self._next_ballast = 0
+        self.suspends = 0
+        self.resumes = 0
+        self.replay_prefill_tokens = 0
+        self.replay_mismatches = 0
 
     # -- introspection ------------------------------------------------- #
     @property
@@ -460,6 +501,11 @@ class PagedServingSession:
             "rows_attended": self.rows_attended,
             "aliased_pages": self.cache.num_aliased_pages(),
             "free_pages": self.cache.num_free_pages,
+            "suspends": self.suspends,
+            "resumes": self.resumes,
+            "suspended": len(self.suspended),
+            "replay_prefill_tokens": self.replay_prefill_tokens,
+            "replay_mismatches": self.replay_mismatches,
         }
 
     # -- admission / branching ----------------------------------------- #
@@ -535,6 +581,7 @@ class PagedServingSession:
         self.outputs[child] = list(self.outputs[rid])
         self.last_token[child] = self.last_token[rid]
         self._prompt[child] = list(self._prompt[rid])
+        self._family[child] = (rid, self.cache.seq_len(child))
         return child
 
     def admit_with_prefix(
@@ -571,6 +618,7 @@ class PagedServingSession:
         # cache row).
         ctx = (self._prompt[parent_rid] + self.outputs[parent_rid])[:-1]
         self._prompt[child] = ctx[:start] + suffix
+        self._family[child] = (parent_rid, start)
         self._prefill_shapes.add((1, self.prefill_chunk))
         logits = _tf.lm_prefill_paged(
             self.params,
@@ -705,7 +753,163 @@ class PagedServingSession:
         self.cache.free(rid)
         self.last_token.pop(rid, None)
         self._prompt.pop(rid, None)
+        self._family.pop(rid, None)
         return self.outputs.pop(rid)
+
+    # -- recoverable eviction / replay ---------------------------------- #
+    def suspend(self, rid: int) -> SuspendedRequest:
+        """Evict ``rid`` recoverably: free its pages now (refcount/COW-
+        aware — an aliased prefix page just loses one owner, a forked
+        sibling's data is untouched) while keeping the prompt + emitted
+        tokens host-side.  No speculation state needs clearing: between
+        steps the cache rows are always prompt + outputs[:-1] (speculative
+        rollback restores that invariant inside step()), so the pending
+        token ``outputs[-1]`` plus the token history *is* the full decode
+        state.  :meth:`resume` rebuilds the rows by replay."""
+        if rid not in self.active:
+            raise KeyError(f"request {rid} is not live")
+        parent, prefix_rows = self._family.get(rid, (None, 0))
+        rec = SuspendedRequest(
+            prompt=list(self._prompt[rid]),
+            outputs=self.outputs[rid],
+            parent=parent,
+            prefix_len=prefix_rows,
+        )
+        self.active.remove(rid)
+        self.cache.free(rid)
+        self.outputs.pop(rid)
+        self.last_token.pop(rid, None)
+        self._prompt.pop(rid, None)
+        self._family.pop(rid, None)
+        self.suspended[rid] = rec
+        self.suspends += 1
+        return rec
+
+    def resume(self, rid: int) -> bool:
+        """Re-admit a suspended request under its old rid.
+
+        Replays its cache rows through the fixed-chunk paged prefill —
+        re-aliasing the parent's prefix pages first when the fork parent is
+        still live (``admit_with_prefix`` semantics: only the divergent
+        suffix recomputes) — then continues decoding from the same pending
+        token, so greedy outputs match an uninterrupted run exactly.
+        Returns False (nothing allocated) when the pool lacks pages;
+        callers retry once pages free up.  Resume bypasses ``max_batch``:
+        the request was already admitted once.
+        """
+        rec = self.suspended.get(rid)
+        if rec is None:
+            raise KeyError(f"request {rid} is not suspended")
+        if not self._replay(rid, rec, rec.parent):
+            return False
+        del self.suspended[rid]
+        return True
+
+    def resume_pending(self) -> list[int]:
+        """Resume every suspended request the pool has room for, ascending
+        rid — prefix parents precede their forked children, so a family
+        re-aliases in order.  Returns the rids that made it back."""
+        return [rid for rid in sorted(self.suspended) if self.resume(rid)]
+
+    def adopt_suspended(
+        self, rec: SuspendedRequest, parent: int | None = None
+    ) -> int | None:
+        """Admit another session's suspended record under a fresh local rid
+        — the cross-shard re-route path of ``fail_shard``.  ``parent``
+        names the prefix parent's rid *in this session* when the family
+        moved together; None replays the full history standalone.  Returns
+        the new rid, or None (nothing allocated) when the pool lacks room.
+        """
+        rid = self._next_id
+        self._next_id += 1
+        if not self._replay(rid, rec, parent):
+            return None
+        return rid
+
+    def discard_suspended(self, rid: int) -> list[int]:
+        """Drop a suspended request for good (abandon); returns its output
+        so far.  Nothing device-side is held — suspend already freed it."""
+        return self.suspended.pop(rid).outputs
+
+    def _replay(
+        self, rid: int, rec: SuspendedRequest, parent: int | None
+    ) -> bool:
+        from repro.models import transformer as _tf
+
+        tokens = rec.tokens
+        use_parent = parent is not None and parent in self.active
+        prefix = (
+            min(rec.prefix_len, len(tokens), self.cache.seq_len(parent))
+            if use_parent
+            else 0
+        )
+        suffix = tokens[prefix:]
+        if use_parent:
+            self.cache.fork(parent, rid, prefix)
+            if suffix and not self.cache.has_room(rid, len(suffix)):
+                self.cache.free(rid)
+                return False
+        else:
+            if not self.cache.has_room(None, len(suffix)):
+                return False
+            self.cache.alloc(rid)
+        if suffix:
+            self._prefill_shapes.add((1, self.prefill_chunk))
+            logits = _tf.lm_prefill_paged(
+                self.params,
+                suffix,
+                cfg=self.cfg,
+                cache=self.cache,
+                rid=rid,
+                start_pos=prefix,
+                chunk=self.prefill_chunk,
+                table_width=self.table_width,
+                block_k=self.block_k,
+                interpret=self.interpret,
+                layer_params=self._layers,
+                compute_dtype=self.compute_dtype,
+                head_shards=self.head_shards,
+            )
+            # Replay-integrity probe: the replayed prefill's final greedy
+            # pick must re-derive the pending token the original run
+            # emitted from these same rows.  Counted rather than raised —
+            # the stream stays serviceable — and gated at 0 by the
+            # fault-tolerance tests and the failure_recovery benchmark.
+            if int(jnp.argmax(logits[0])) != int(rec.outputs[-1]):
+                self.replay_mismatches += 1
+            self.replay_prefill_tokens += len(suffix)
+        self.active.append(rid)
+        self._prompt[rid] = list(rec.prompt)
+        self.outputs[rid] = rec.outputs
+        self.last_token[rid] = int(rec.outputs[-1])
+        if use_parent:
+            self._family[rid] = (parent, prefix)
+        self.resumes += 1
+        return True
+
+    # -- chaos hooks ----------------------------------------------------- #
+    def hold_pages(self, n: int) -> int:
+        """Seize up to ``n`` free pages as ballast (pool-pressure fault
+        injection): the pages leave the free list under an internal
+        negative rid, so admission control and ``has_room`` see real
+        pressure without any request state being touched.  Returns a
+        handle for :meth:`release_pages`; the host-mirror refcount sweep
+        counts the ballast as live until released."""
+        n = min(int(n), self.cache.num_free_pages)
+        self._next_ballast -= 1
+        handle = self._next_ballast  # negative: never collides with rids
+        self.cache.alloc(handle)
+        if n > 0:
+            self.cache.reserve(handle, n * self.cache.page_size)
+        self._ballast.add(handle)
+        return handle
+
+    def release_pages(self, handle: int) -> None:
+        """Return a :meth:`hold_pages` ballast's pages to the free list."""
+        if handle not in self._ballast:
+            raise KeyError(f"{handle} is not a held ballast handle")
+        self._ballast.discard(handle)
+        self.cache.free(handle)
 
 
 class ShardedPagedServingSession:
@@ -818,6 +1022,34 @@ class ShardedPagedServingSession:
         self.active: list[int] = []
         self.outputs: dict[int, list[int]] = {}
         self._next_id = 0
+        # Shard lifecycle: healthy shards admit, draining shards only
+        # finish what they hold, dead shards are gone (fail_shard suspended
+        # and re-routed their requests).  attach_shard grows the fleet with
+        # a fresh pool slice built from the same constructor kwargs.
+        self._health: list[str] = ["healthy"] * n_data
+        self._model = model
+        self._params = params
+        self._pages_per_shard = num_pages // n_data
+        self._page_size = self.shards[0].cache.page_size
+        self._shard_kwargs = dict(
+            page_size=page_size,
+            block_k=block_k,
+            num_splits=num_splits,
+            prefix_sharing=prefix_sharing,
+            min_group=min_group,
+            prefill_chunk=prefill_chunk,
+            interpret=interpret,
+            dtype=dtype,
+            kv_dtype=kv_dtype,
+            speculate=speculate,
+            draft_k=draft_k,
+            draft_proposer=draft_proposer,
+        )
+        # Suspended records live at this level: cross-shard resume must not
+        # depend on a (possibly dead) origin shard's bookkeeping.
+        self.suspended: dict[int, SuspendedRequest] = {}
+        # child gid -> (parent gid, shared rows): family pinning for resume.
+        self._gfamily: dict[int, tuple[int, int]] = {}
 
     # -- routing -------------------------------------------------------- #
     def _live_blocks(self, shard: PagedServingSession) -> int:
@@ -851,14 +1083,13 @@ class ShardedPagedServingSession:
                 "add_request needs at least one prompt token (an empty "
                 "prompt has no prefill position to decode from)"
             )
-        pool = self.shards[0].cache
-        pages = -(-len(prompt) // pool.page_size)
-        if pages > pool.num_pages:
+        pages = -(-len(prompt) // self._page_size)
+        if pages > self._pages_per_shard:
             raise ValueError(
                 f"prompt of {len(prompt)} tokens needs {pages} pages but "
                 f"each of the {self.num_shards} shard pools only has "
-                f"{pool.num_pages}; a request lives on ONE shard — grow "
-                "num_pages or truncate the prompt"
+                f"{self._pages_per_shard}; a request lives on ONE shard — "
+                "grow num_pages or truncate the prompt"
             )
         if self.max_batch is not None and len(self.active) >= self.max_batch:
             return None
@@ -866,6 +1097,7 @@ class ShardedPagedServingSession:
             [self._live_blocks(s) for s in self.shards],
             [s.cache.num_free_pages for s in self.shards],
             pages,
+            shard_ok=[h == "healthy" for h in self._health],
         )
         if idx is None:
             return None  # no shard has room right now: evict and retry
@@ -876,10 +1108,13 @@ class ShardedPagedServingSession:
 
     def fork(self, rid: int, prefix_len: int | None = None) -> int:
         """Branch at full history on the parent's shard (aliasing is
-        pool-local, so the family stays together)."""
+        pool-local, so the family stays together — even on a draining
+        shard: the parent was admitted before the drain)."""
         idx, local = self._where[rid]
         child_local = self.shards[idx].fork(local, prefix_len)
-        return self._register(idx, child_local)
+        gid = self._register(idx, child_local)
+        self._gfamily[gid] = (rid, self.shards[idx].cache.seq_len(child_local))
+        return gid
 
     def admit_with_prefix(
         self, parent_rid: int, suffix_tokens, prefix_len: int | None = None
@@ -894,7 +1129,11 @@ class ShardedPagedServingSession:
         )
         if child_local is None:
             return None
-        return self._register(idx, child_local)
+        gid = self._register(idx, child_local)
+        self._gfamily[gid] = (
+            parent_rid, self.shards[idx]._family[child_local][1]
+        )
+        return gid
 
     # -- decode ---------------------------------------------------------- #
     def step(self) -> None:
@@ -914,7 +1153,139 @@ class ShardedPagedServingSession:
         idx, local = self._where.pop(rid)
         self.active.remove(rid)
         self.outputs.pop(rid)
+        self._gfamily.pop(rid, None)
         return self.shards[idx].finish(local)
+
+    # -- recoverable eviction / shard lifecycle -------------------------- #
+    @property
+    def shard_health(self) -> list[str]:
+        """Per-shard lifecycle state: healthy / draining / dead."""
+        return list(self._health)
+
+    def suspend(self, gid: int) -> SuspendedRequest:
+        """Suspend ``gid`` wherever it lives: its shard frees the pages
+        (refcount/COW-aware) and the replay record moves up to this level,
+        so resume can re-route it to any shard.  ``self.outputs[gid]``'s
+        view keeps aliasing the record's output list."""
+        if gid not in self.active:
+            raise KeyError(f"request {gid} is not live")
+        idx, local = self._where.pop(gid)
+        rec = self.shards[idx].suspend(local)
+        self.shards[idx].suspended.pop(local, None)
+        self.active.remove(gid)
+        self.suspended[gid] = rec
+        return rec
+
+    def resume(self, gid: int) -> bool:
+        """Re-route + replay one suspended request.
+
+        Family pinning: while the fork parent is live, the child resumes
+        on the parent's (possibly new) shard and re-aliases its prefix
+        pages; otherwise ``route_request`` picks a healthy shard and the
+        full history replays standalone.  Returns False when no eligible
+        shard has room yet — callers retry after pages free up.
+        """
+        from repro.kernels.decode_schedule import route_request
+
+        rec = self.suspended.get(gid)
+        if rec is None:
+            raise KeyError(f"request {gid} is not suspended")
+        parent_gid, _rows = self._gfamily.get(gid, (None, 0))
+        if parent_gid is not None and parent_gid in self.active:
+            idx, parent_local = self._where[parent_gid]
+            local = self.shards[idx].adopt_suspended(rec, parent=parent_local)
+        else:
+            pages = -(-len(rec.tokens) // self._page_size)
+            idx = route_request(
+                [self._live_blocks(s) for s in self.shards],
+                [s.cache.num_free_pages for s in self.shards],
+                pages,
+                shard_ok=[h == "healthy" for h in self._health],
+            )
+            if idx is None:
+                return False
+            local = self.shards[idx].adopt_suspended(rec, parent=None)
+        if local is None:
+            return False
+        del self.suspended[gid]
+        self._where[gid] = (idx, local)
+        self.active.append(gid)
+        self.outputs[gid] = self.shards[idx].outputs[local]
+        return True
+
+    def resume_pending(self) -> list[int]:
+        """Try to resume every suspended request, ascending gid — a fork
+        parent always has a smaller gid than its children, so family roots
+        re-place first and the children re-alias on the root's new shard.
+        Returns the gids that made it back; the rest stay suspended for
+        the next call (the supervisor's retry loop)."""
+        return [gid for gid in sorted(self.suspended) if self.resume(gid)]
+
+    def discard_suspended(self, gid: int) -> list[int]:
+        """Drop a suspended request for good (abandon); returns its output
+        so far."""
+        rec = self.suspended.pop(gid)
+        self.outputs.pop(gid, None)
+        self._gfamily.pop(gid, None)
+        return rec.outputs
+
+    def drain_shard(self, idx: int) -> int:
+        """Stop admitting onto shard ``idx``; its live requests keep
+        decoding to completion.  Returns how many are still draining.
+        Idempotent; a dead shard stays dead."""
+        if self._health[idx] != "dead":
+            self._health[idx] = "draining"
+        return len(self.shards[idx].active)
+
+    def fail_shard(self, idx: int) -> dict:
+        """Shard loss: mark ``idx`` dead, suspend every live request it
+        held (the host-side prompt/output mirror survives on the
+        controller; the device pool is gone), then immediately try to
+        re-route them to the survivors via :meth:`resume_pending` —
+        family roots first, children re-aliasing on the root's new shard.
+        Requests that do not fit yet stay suspended for the retry loop.
+        Returns ``{"suspended": [...], "resumed": [...]}``."""
+        if self._health[idx] == "dead":
+            return {"suspended": [], "resumed": []}
+        self._health[idx] = "dead"
+        victims = [g for g in list(self.active) if self._where[g][0] == idx]
+        for gid in victims:
+            self.suspend(gid)
+        return {"suspended": victims, "resumed": self.resume_pending()}
+
+    def attach_shard(self, device=None) -> int:
+        """Elastic grow: bring up a fresh shard — a params replica placed
+        through :func:`repro.runtime.elastic.serving_params_replica` (a
+        host-staged put; no-op placement for logical shards) plus an empty
+        pool slice the same size as every other shard's — and open it for
+        routing.  Returns the new shard's index; being empty, it wins
+        ``route_request`` for new admissions immediately."""
+        from repro.runtime import elastic
+
+        replica = elastic.serving_params_replica(self._params, device)
+        self.shards.append(
+            PagedServingSession(
+                self._model,
+                replica,
+                num_pages=self._pages_per_shard,
+                device=device,
+                head_shards=self.head_shards,
+                **self._shard_kwargs,
+            )
+        )
+        self._health.append("healthy")
+        self.num_shards += 1
+        return len(self.shards) - 1
+
+    # -- chaos hooks ------------------------------------------------------ #
+    def hold_pages(self, n: int, shard: int = 0) -> tuple[int, int]:
+        """Pool-pressure ballast on one shard (see
+        :meth:`PagedServingSession.hold_pages`)."""
+        return shard, self.shards[shard].hold_pages(n)
+
+    def release_pages(self, handle: tuple[int, int]) -> None:
+        shard, h = handle
+        self.shards[shard].release_pages(h)
 
     # -- introspection --------------------------------------------------- #
     @property
@@ -956,8 +1327,17 @@ class ShardedPagedServingSession:
                 "rows_attended",
                 "aliased_pages",
                 "free_pages",
+                "suspends",
+                "resumes",
+                "replay_prefill_tokens",
+                "replay_mismatches",
             )
         }
+        # Requests suspended at this level (awaiting re-route) are held by
+        # no shard; shard-level "suspended" counts are always 0 here
+        # because suspend() moves the records up immediately.
+        agg["suspended"] = len(self.suspended)
+        agg["shard_health"] = self.shard_health
         # Ratios recompute from the summed raw counters — averaging the
         # per-shard ratios would weight empty shards equally with busy ones.
         agg["accepted_tokens_per_step"] = agg["accepted_tokens"] / max(
@@ -971,6 +1351,382 @@ class ShardedPagedServingSession:
             [st["page_dmas"] for st in per_shard]
         )
         return agg
+
+
+class ServeSupervisor:
+    """Supervised continuous-batching serve loop with deterministic chaos.
+
+    Drives a :class:`PagedServingSession` or
+    :class:`ShardedPagedServingSession` until every submitted request has
+    either completed ``gen_len`` tokens or been abandoned.  Between decode
+    steps it:
+
+    * applies due :class:`~repro.runtime.fault_injection.FaultPlan` events
+      — shard loss, slow shard, pool-pressure ballast, request abandon —
+      through the session's own fault-tolerance surface, so injected and
+      real faults share one recovery path;
+    * retries suspended requests (recoverable eviction/replay, including
+      re-routes off dead shards), with exponential backoff for requests it
+      itself evicted under pool pressure so they cannot livelock the pool;
+    * admits queued prompts FIFO with exponential backoff after a
+      rejection (head-of-line on purpose: FIFO keeps the stream order
+      deterministic);
+    * enforces optional per-request ``deadline``\\ s (decode steps since
+      admission), abandoning over-deadline requests with their partial
+      output intact;
+    * feeds wall-clock step times to a
+      :class:`~repro.runtime.fault_tolerance.StragglerMonitor`;
+    * on :class:`~repro.runtime.kv_cache.OutOfPagesError` suspends — not
+      kills — the most-complete request on the fullest pool and retries
+      the step; the victim resumes when pages free up.
+
+    Faults never change tokens: every request's greedy stream depends only
+    on its own prompt (per-request kernel math is batch- and
+    shard-independent, and replay re-derives the same rows), so a chaos
+    run's outputs are bit-identical to a fault-free run of the same
+    stream — which the ``failure_recovery`` benchmark and the chaos tests
+    gate exactly.  :meth:`run` returns results keyed by **submission
+    index** (not rid) so those comparisons line up directly.
+    """
+
+    def __init__(
+        self,
+        sess,
+        *,
+        gen_len: int,
+        deadline: int | None = None,
+        plan=None,
+        max_steps: int | None = None,
+        backoff_base: int = 1,
+        backoff_cap: int = 16,
+    ):
+        from repro.runtime.fault_tolerance import StragglerMonitor
+
+        if not hasattr(sess, "suspended"):
+            raise ValueError(
+                "ServeSupervisor needs a paged session (suspend/resume "
+                "rides the paged pool's refcounted free/replay; dense "
+                "slot sessions have neither)"
+            )
+        if gen_len < 1:
+            raise ValueError(f"gen_len must be >= 1, got {gen_len}")
+        if deadline is not None and deadline < 1:
+            raise ValueError(f"deadline must be >= 1 steps, got {deadline}")
+        self.sess = sess
+        self.gen_len = int(gen_len)
+        self.deadline = deadline
+        self.plan = plan
+        self.max_steps = max_steps
+        self.backoff_base = max(1, int(backoff_base))
+        self.backoff_cap = max(self.backoff_base, int(backoff_cap))
+        self.straggler = StragglerMonitor()
+        self._submitted: list[list[int]] = []
+        self._queue: list[list[int]] = []  # [sub_idx, not_before, backoff]
+        self._live: dict[int, dict] = {}  # rid -> idx/remaining/admitted
+        self._results: dict[int, list[int]] = {}
+        self.abandoned_idx: set[int] = set()
+        self._ballast: list[tuple[int, object]] = []  # (release_step, handle)
+        self._slow: tuple[int, float] | None = None  # (until_step, factor)
+        self._resume_hold: dict[int, list[int]] = {}  # rid -> [step, backoff]
+        self._plan_applied: set[int] = set()
+        self.steps = 0
+        self.completed = 0
+        self.abandoned = 0
+        self.tokens_out = 0
+        self.admission_retries = 0
+        self.evictions = 0
+        self.faults_applied = 0
+        self.faults_skipped = 0
+        self.events: list[str] = []
+
+    def submit(self, prompt_tokens) -> int:
+        """Queue a prompt; returns its submission index (the results key)."""
+        idx = len(self._submitted)
+        self._submitted.append(list(map(int, prompt_tokens)))
+        self._queue.append([idx, 0, self.backoff_base])
+        return idx
+
+    # -- the loop -------------------------------------------------------- #
+    def run(self) -> dict[int, list[int]]:
+        """Serve until every submission completed or was abandoned.
+
+        Returns ``{submission index: generated tokens}``.  Raises
+        RuntimeError when the stream provably cannot make progress (a
+        prompt that can never admit, suspended requests with no path back)
+        or exceeds the step safety limit.
+        """
+        from repro.runtime.kv_cache import OutOfPagesError
+
+        sess = self.sess
+        limit = self.max_steps
+        if limit is None:
+            # Generous ceiling: a stalled loop must fail loudly, never spin.
+            limit = (self.gen_len + 8) * (len(self._submitted) + 4) * 4
+        while self._queue or self._live:
+            step = self.steps
+            if step >= limit:
+                raise RuntimeError(
+                    f"supervised serve stalled after {step} steps with "
+                    f"{len(self._live)} live and {len(self._queue)} queued "
+                    "requests"
+                )
+            self._apply_plan(step)
+            self._tick_ballast(step)
+            self._try_resume(step)
+            self._admit(step)
+            steppable = [r for r in self._live if r not in sess.suspended]
+            if not steppable:
+                self._idle_tick(step)
+                continue
+            before = {r: len(sess.outputs[r]) for r in steppable}
+            t0 = time.perf_counter()
+            oom = False
+            try:
+                sess.step()
+            except OutOfPagesError:
+                # Appends are atomic per shard pool, so every request either
+                # emitted normally or not at all — account what did emit
+                # below, then recoverably evict a victim for the next step.
+                oom = True
+            dt = time.perf_counter() - t0
+            if not oom:
+                if self._slow is not None:
+                    until, factor = self._slow
+                    if step < until:
+                        # Injected straggle: inflate the observation against
+                        # the monitor's own baseline (deterministic flagging
+                        # — factor > threshold — with no real sleeps).
+                        if self.straggler.ewma is not None:
+                            dt += factor * self.straggler.ewma
+                    else:
+                        self._slow = None
+                self.straggler.observe(step, dt)
+            for rid in list(self._live):
+                info = self._live[rid]
+                if rid in before:
+                    emitted = len(sess.outputs[rid]) - before[rid]
+                    self.tokens_out += emitted
+                    info["remaining"] -= emitted
+                    if info["remaining"] <= 0:
+                        self._results[info["idx"]] = sess.finish(rid)
+                        self.completed += 1
+                        del self._live[rid]
+                        continue
+                if (
+                    self.deadline is not None
+                    and step - info["admitted"] >= self.deadline
+                ):
+                    self._abandon(rid)
+            if oom:
+                victims = [
+                    r
+                    for r in steppable
+                    if r in self._live and r not in sess.suspended
+                ]
+                if victims:
+                    self._suspend_victim(victims)
+            self.steps += 1
+        for _, handle in self._ballast:
+            sess.release_pages(handle)
+        self._ballast.clear()
+        return dict(self._results)
+
+    def stats(self) -> dict:
+        """Supervision counters + the session's suspend/replay work."""
+        work = self.sess.work_stats()
+        return {
+            "steps": self.steps,
+            "completed": self.completed,
+            "abandoned": self.abandoned,
+            "tokens_out": self.tokens_out,
+            "admission_retries": self.admission_retries,
+            "evictions": self.evictions,
+            "faults_applied": self.faults_applied,
+            "faults_skipped": self.faults_skipped,
+            "straggler_events": len(self.straggler.events),
+            "suspends": work.get("suspends", 0),
+            "resumes": work.get("resumes", 0),
+            "replay_prefill_tokens": work.get("replay_prefill_tokens", 0),
+            "replay_mismatches": work.get("replay_mismatches", 0),
+        }
+
+    # -- internals ------------------------------------------------------- #
+    def _admit(self, step: int, force: bool = False) -> bool:
+        admitted = False
+        while self._queue:
+            item = self._queue[0]
+            if not force and item[1] > step:
+                break
+            rid = self.sess.add_request(self._submitted[item[0]])
+            if rid is None:
+                item[1] = step + item[2]
+                item[2] = min(item[2] * 2, self.backoff_cap)
+                self.admission_retries += 1
+                break
+            self._queue.pop(0)
+            self._live[rid] = {
+                "idx": item[0],
+                "remaining": self.gen_len,
+                "admitted": step,
+            }
+            admitted = True
+            force = False
+        return admitted
+
+    def _try_resume(self, step: int) -> None:
+        sess = self.sess
+        if not sess.suspended:
+            return
+        # Ascending id: fork parents precede children (family re-aliasing).
+        # Requests this supervisor evicted under pool pressure sit out
+        # their backoff first — resuming them straight into the pressure
+        # that evicted them would re-evict immediately (livelock) while
+        # the backoff lets the other requests finish and free real pages.
+        for rid in sorted(sess.suspended):
+            hold = self._resume_hold.get(rid)
+            if hold is not None and hold[0] > step:
+                continue
+            if sess.resume(rid):
+                self._resume_hold.pop(rid, None)
+
+    def _idle_tick(self, step: int) -> None:
+        # Nothing steppable.  Progress can still arrive from a ballast
+        # release, an eviction backoff expiring, or an admission backoff
+        # timer — otherwise waiting is spinning: fail loudly, like the
+        # plain serve loop's cannot-ever-admit check.
+        if self._ballast:
+            self.steps += 1
+            return
+        sess = self.sess
+        if self._live:
+            if any(
+                self._resume_hold.get(r, [0])[0] > step for r in self._live
+            ):
+                self.steps += 1  # eviction backoff pending: wait it out
+                return
+            raise RuntimeError(
+                f"{len(self._live)} suspended request(s) cannot be resumed "
+                "— no eligible shard has room and nothing live could free "
+                "pages"
+            )
+        if self._queue:
+            if self._admit(step, force=True):
+                return  # same step re-runs with live requests
+            raise RuntimeError(
+                f"request of {len(self._submitted[self._queue[0][0]])} "
+                "tokens cannot be admitted even with an idle session — "
+                "grow the pool or truncate the prompt"
+            )
+        del sess  # loop condition handles the all-done case
+
+    def _suspend_victim(self, steppable: list[int]) -> None:
+        # Pool exhausted by decode-time growth: recoverably evict the
+        # most-complete request on the fullest pool (most pages back for
+        # one suspension, finishing soonest once resumed).
+        sess = self.sess
+        if hasattr(sess, "shards"):
+            def free(r):
+                return sess.shards[sess.shard_of(r)].cache.num_free_pages
+        else:
+            def free(r):
+                return sess.cache.num_free_pages
+        victim = max(
+            steppable,
+            key=lambda r: (-free(r), len(sess.outputs[r]), -r),
+        )
+        sess.suspend(victim)
+        hold = self._resume_hold.setdefault(victim, [0, self.backoff_base])
+        hold[1] = min(hold[1] * 2, 32)
+        hold[0] = self.steps + hold[1]
+        self.evictions += 1
+        self.events.append(
+            f"step {self.steps}: pool full — suspended request {victim}"
+        )
+
+    def _abandon(self, rid: int) -> None:
+        info = self._live.pop(rid)
+        sess = self.sess
+        if rid in sess.suspended:
+            out = sess.discard_suspended(rid)
+        else:
+            out = sess.finish(rid)
+        self._results[info["idx"]] = out
+        self.abandoned_idx.add(info["idx"])
+        self.abandoned += 1
+        self.events.append(
+            f"step {self.steps}: abandoned request {rid} "
+            f"(submission {info['idx']}) with {len(out)} tokens"
+        )
+
+    def _apply_plan(self, step: int) -> None:
+        # The same step index can re-enter after an eviction retry; plan
+        # events must fire exactly once.
+        if self.plan is None or step in self._plan_applied:
+            return
+        self._plan_applied.add(step)
+        sess = self.sess
+        for ev in self.plan.events_at(step):
+            if ev.kind == "shard_loss":
+                healthy = [
+                    i
+                    for i, h in enumerate(getattr(sess, "shard_health", []))
+                    if h == "healthy"
+                ]
+                if len(healthy) < 2:
+                    # Never kill the last healthy shard: an unrecoverable
+                    # plan gates nothing.  Count the skip and keep serving.
+                    self.faults_skipped += 1
+                    continue
+                target = (
+                    ev.shard
+                    if ev.shard in healthy
+                    else healthy[ev.shard % len(healthy)]
+                )
+                res = sess.fail_shard(target)
+                self.faults_applied += 1
+                self.events.append(
+                    f"step {step}: shard {target} lost — "
+                    f"{len(res['suspended'])} suspended, "
+                    f"{len(res['resumed'])} re-routed immediately"
+                )
+            elif ev.kind == "slow_shard":
+                self._slow = (step + max(1, ev.duration), ev.factor)
+                self.faults_applied += 1
+                self.events.append(
+                    f"step {step}: slow shard x{ev.factor:g} for "
+                    f"{max(1, ev.duration)} steps"
+                )
+            elif ev.kind == "pool_pressure":
+                if hasattr(sess, "shards"):
+                    shard = ev.shard % sess.num_shards
+                    if sess.shard_health[shard] != "healthy":
+                        self.faults_skipped += 1
+                        continue
+                    handle = sess.hold_pages(ev.pages, shard=shard)
+                else:
+                    handle = sess.hold_pages(ev.pages)
+                self._ballast.append((step + max(1, ev.duration), handle))
+                self.faults_applied += 1
+                self.events.append(
+                    f"step {step}: pool pressure — {ev.pages} pages held "
+                    f"for {max(1, ev.duration)} steps"
+                )
+            elif ev.kind == "abandon":
+                if not self._live:
+                    self.faults_skipped += 1
+                    continue
+                rid = min(self._live, key=lambda r: self._live[r]["idx"])
+                self.faults_applied += 1
+                self._abandon(rid)
+
+    def _tick_ballast(self, step: int) -> None:
+        keep = []
+        for due, handle in self._ballast:
+            if due <= step:
+                self.sess.release_pages(handle)
+            else:
+                keep.append((due, handle))
+        self._ballast = keep
 
 
 class PagedDecodeSession:
