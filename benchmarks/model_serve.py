@@ -138,7 +138,7 @@ def _serve_scenario(cfg, model, params, g, *, shared_prefix: bool) -> dict:
     dense_row_reads = (steps + 1) * n_live * g["max_len"] * n_layers
     work = paged.work_stats()
     fetched_rows = work["page_dmas"] * g["page"]
-    return {
+    res = {
         "requests": n_live,
         "decode_steps": work["decode_steps"],
         "tokens_per_s_dense": toks / max(dt_dense, 1e-9),
@@ -154,6 +154,8 @@ def _serve_scenario(cfg, model, params, g, *, shared_prefix: bool) -> dict:
         "prefill_compiles_dense": dense.prefill_compiles,
         "aliased_pages": work["aliased_pages"],
     }
+    paged.close()  # leak audit: raises unless every page returns to free
+    return res
 
 
 def _sharded_scenario(cfg, model, params, g, *, shards: int = 2) -> dict:
@@ -206,6 +208,8 @@ def _sharded_scenario(cfg, model, params, g, *, shards: int = 2) -> dict:
     for i, st in enumerate(work["per_shard"]):
         res[f"shard{i}_page_dmas"] = st["page_dmas"]
         res[f"shard{i}_rows_attended"] = st["rows_attended"]
+    single.close()  # leak audits: raise unless every pool drains to free
+    sharded.close()
     return res
 
 
@@ -235,6 +239,8 @@ def _dtype_scenario(cfg, model, params, g) -> dict:
     toks = len(prompts) * g["steps"]
     work = {k: s.work_stats() for k, s in sessions.items()}
     matches = sum(a == b for a, b in zip(outs["bf16"], outs["int8"]))
+    for s in sessions.values():
+        s.close()  # leak audit
     return {
         "requests": len(prompts),
         "decode_steps": work["int8"]["decode_steps"],
@@ -315,6 +321,8 @@ def _speculative_scenario(cfg, model, params, g, *, draft_k: int = 4) -> dict:
     work, work_off = spec.work_stats(), off.work_stats()
     toks_off = len(prompts) * target
     toks_spec = sum(len(spec.outputs[r]) - 1 for r in r_spec)
+    off.close()  # leak audits
+    spec.close()
     return {
         "requests": len(prompts),
         "draft_k": draft_k,
@@ -396,6 +404,7 @@ def _failure_recovery_scenario(cfg, model, params, g, *, shards: int = 2) -> dic
         sweep = s.cache.refcount_sweep()  # raises on refcount divergence
         leaked += sweep["live_pages"]
     work = sess.work_stats()
+    sess.close()  # full teardown audit on the faulted session
     toks = stats["tokens_out"]
     return {
         "requests": len(prompts),
@@ -416,6 +425,101 @@ def _failure_recovery_scenario(cfg, model, params, g, *, shards: int = 2) -> dic
         "replay_token_overhead": stats["replay_prefill_tokens"] / max(toks, 1),
         "leaked_pages": leaked,
     }
+
+
+def _multi_tenant_scenario(cfg, model, params, g) -> dict:
+    """Prefix-trie row: a multi-tenant template stream, trie-on vs trie-off.
+
+    Every request shares a 3-block system-prompt template with a private
+    ragged tail — the sustained multi-tenant traffic shape the radix trie
+    exists for.  Admissions arrive in staggered waves with overlapping
+    lifetimes, so hits alias both *live* requests' pages and *retained*
+    (finished) prefixes.  The off twin serves the identical stream through
+    the pre-trie default path (no sharing, full prefill per request).
+
+    Gates (both cache dtypes): ``greedy_match_vs_off == 1.0`` — automatic
+    admission must be invisible in the tokens, which is why only
+    chunk-aligned prefill-written blocks are ever retained — and
+    ``dma_bytes_reduction_vs_off >= 2.0`` at equal output tokens, the
+    zero-copy adoption + nested group-prefix scheduling headline.  After
+    the stream, ``reclaim_retained`` drains every retained subtree
+    (eviction churn) and ``close()`` runs the refcount sweep — any leaked
+    page raises, reported as ``sweep_clean``.
+    """
+    rng = np.random.default_rng(0)
+    template = rng.integers(2, cfg.vocab_size, size=3 * g["block_k"]).tolist()
+    n_req = 2 * max(len(g["prompts"]), 4)
+    prompts = [
+        template + rng.integers(2, cfg.vocab_size, size=5 + 3 * i).tolist()
+        for i in range(n_req)
+    ]
+    wave_steps = max(g["steps"] // 2, 2)
+
+    def _serve(prefix_cache, kv_dtype=None):
+        sess = PagedServingSession(
+            model, params, num_pages=g["num_pages"], page_size=g["page"],
+            block_k=g["block_k"], prefill_chunk=g["chunk"],
+            prefix_cache=prefix_cache, kv_dtype=kv_dtype,
+        )
+        outs, live = {}, []
+        t0 = time.perf_counter()
+        for w in range(n_req // 2):
+            for j in range(2):
+                rid = sess.add_request(prompts[2 * w + j])
+                assert rid is not None, "pool sized to admit every wave"
+                live.append(rid)
+            for _ in range(wave_steps):
+                sess.step()
+            if len(live) >= 4:  # overlapping lifetimes: finish the oldest
+                for r in live[:2]:
+                    outs[r] = sess.finish(r)
+                live = live[2:]
+        for _ in range(wave_steps):
+            sess.step()
+        for r in live:
+            outs[r] = sess.finish(r)
+        jax.block_until_ready(sess.cache.pages)
+        dt = time.perf_counter() - t0
+        # Eviction churn before the sweep: drain every retained subtree,
+        # then tear down — close() raises if any page fails to come home.
+        sess.reclaim_retained(g["num_pages"])
+        work = sess.work_stats()
+        work["schedule_rebuilds"] = sess.scheduler_stats["rebuilds"]
+        sweep = sess.close()
+        clean = sweep["free_pages"] == g["num_pages"]
+        return outs, work, dt, clean
+
+    res = {"requests": n_req, "template_tokens": 3 * g["block_k"]}
+    toks = {}
+    for dname, dtype in (("bf16", None), ("int8", "int8")):
+        off, w_off, dt_off, clean_off = _serve("off", dtype)
+        on, w_on, dt_on, clean_on = _serve("trie", dtype)
+        toks[dname] = sum(len(v) for v in on.values())
+        assert sum(len(v) for v in off.values()) == toks[dname]
+        matches = sum(on[r] == off[r] for r in off)
+        suffix = "" if dname == "bf16" else "_int8"
+        res[f"greedy_match_vs_off{suffix}"] = matches / n_req
+        res[f"dma_bytes_reduction_vs_off{suffix}"] = (
+            w_off["page_dma_bytes"] / max(w_on["page_dma_bytes"], 1)
+        )
+        res[f"sweep_clean{suffix}"] = float(clean_off and clean_on)
+        if dname == "bf16":
+            res.update({
+                "decode_steps": w_on["decode_steps"],
+                "tokens_per_s_paged": toks[dname] / max(dt_on, 1e-9),
+                "tokens_per_s_off": toks[dname] / max(dt_off, 1e-9),
+                "page_dmas_paged": w_on["page_dmas"],
+                "page_dma_bytes_paged": w_on["page_dma_bytes"],
+                "page_dma_bytes_off": w_off["page_dma_bytes"],
+                "prefix_hit_rate": w_on["trie_hit_rate"],
+                "prefix_tokens_reused": w_on["prefix_tokens_reused"],
+                "prefix_tokens_reused_per_admission": w_on[
+                    "prefix_tokens_reused_per_admission"
+                ],
+                "trie_evicted_pages": w_on["trie_evicted_pages"],
+                "schedule_rebuilds": w_on["schedule_rebuilds"],
+            })
+    return res
 
 
 def run(full: bool = False, smoke: bool = False) -> dict:
@@ -449,6 +553,11 @@ def run(full: bool = False, smoke: bool = False) -> dict:
     for k, v in sorted(fr.items()):
         val = f"{v:.2f}" if isinstance(v, float) else v
         print(f"model_serve,failure_recovery,{k},{val}")
+    mt = _multi_tenant_scenario(cfg, model, params, g)
+    report["scenarios"]["multi_tenant"] = mt
+    for k, v in sorted(mt.items()):
+        val = f"{v:.2f}" if isinstance(v, float) else v
+        print(f"model_serve,multi_tenant,{k},{val}")
     rag = report["scenarios"]["ragged"]
     print(
         f"model_serve,summary,read_reduction_vs_dense,"
@@ -496,6 +605,20 @@ def run(full: bool = False, smoke: bool = False) -> dict:
         f"{fr['completed_fraction']:.2f},greedy_match,"
         f"{fr['greedy_match_vs_nofault']:.2f},replay_token_overhead,"
         f"{fr['replay_token_overhead']:.2f},pass,{int(fr_ok)}"
+    )
+    mt_ok = (
+        mt["greedy_match_vs_off"] == 1.0
+        and mt["greedy_match_vs_off_int8"] == 1.0
+        and mt["dma_bytes_reduction_vs_off"] >= 2.0
+        and mt["dma_bytes_reduction_vs_off_int8"] >= 2.0
+        and mt["sweep_clean"] == 1.0
+        and mt["sweep_clean_int8"] == 1.0
+    )
+    print(
+        f"model_serve,acceptance_multi_tenant,dma_bytes_reduction,"
+        f"{mt['dma_bytes_reduction_vs_off']:.2f},greedy_match,"
+        f"{mt['greedy_match_vs_off']:.2f},hit_rate,"
+        f"{mt['prefix_hit_rate']:.2f},pass,{int(mt_ok)}"
     )
     return report
 

@@ -127,6 +127,13 @@ def _summarize(report: dict) -> dict:
                 "replay_token_overhead",
                 "replay_mismatches",
                 "leaked_pages",
+                "dma_bytes_reduction_vs_off",
+                "dma_bytes_reduction_vs_off_int8",
+                "greedy_match_vs_off_int8",
+                "prefix_hit_rate",
+                "prefix_tokens_reused_per_admission",
+                "trie_evicted_pages",
+                "sweep_clean",
             ))
     return out
 
@@ -260,6 +267,11 @@ def check_regression(report: dict, baseline_path: str, tol: float) -> list:
         ("model_serve", "completed_fraction", False, not on_tpu),
         ("model_serve", "greedy_match_vs_nofault", False, not on_tpu),
         ("model_serve", "replay_token_overhead", True, not on_tpu),
+        # [MODEL-SERVE] multi_tenant row: the prefix-trie DMA dedup factor
+        # and the trie hit rate are deterministic work proxies — a trie
+        # regression (missed matches, broken retention) shrinks both.
+        ("model_serve", "dma_bytes_reduction_vs_off", False, not on_tpu),
+        ("model_serve", "prefix_hit_rate", False, not on_tpu),
     ]
     for section_key, metric, lower_better, gated in checks:
         for name, res in report.get(section_key, {}).items():
@@ -305,6 +317,17 @@ ABSOLUTE_FLOORS = [
     # ratchet either below exact.
     ("model_serve", "failure_recovery", "completed_fraction", 1.0),
     ("model_serve", "failure_recovery", "greedy_match_vs_nofault", 1.0),
+    # Prefix-trie admission must be invisible in the tokens (bit-exact
+    # greedy vs trie-off, both cache dtypes), dominate the off path by at
+    # least 2x in page-DMA bytes at equal output, and tear down leak-free
+    # after eviction churn (sweep_clean is 1.0 only when every page of
+    # every session returned to the free list).
+    ("model_serve", "multi_tenant", "greedy_match_vs_off", 1.0),
+    ("model_serve", "multi_tenant", "greedy_match_vs_off_int8", 1.0),
+    ("model_serve", "multi_tenant", "dma_bytes_reduction_vs_off", 2.0),
+    ("model_serve", "multi_tenant", "dma_bytes_reduction_vs_off_int8", 2.0),
+    ("model_serve", "multi_tenant", "sweep_clean", 1.0),
+    ("model_serve", "multi_tenant", "sweep_clean_int8", 1.0),
 ]
 
 

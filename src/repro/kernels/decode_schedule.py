@@ -203,11 +203,87 @@ class PrefixGroups:
     group_member: np.ndarray  # (n_groups, gmax) request index, -1 padding
     group_size: np.ndarray  # (n_groups,)
     group_rep: np.ndarray  # (n_groups,) representative request (table row)
-    shared_blocks: np.ndarray  # (n_groups,) complete KV blocks shared
-    group_of_req: np.ndarray  # (B,) group id, -1 for ungrouped requests
-    slot_of_req: np.ndarray  # (B,) member slot within the group, -1
+    shared_blocks: np.ndarray  # (n_groups,) exclusive END block of the run
+    group_of_req: np.ndarray  # (B,) deepest group id, -1 for ungrouped
+    slot_of_req: np.ndarray  # (B,) member slot within that group, -1
     gmax: int  # max members over groups (stacked-query width)
     num_groups: int
+    # Nested (trie-topology) extensions.  ``group_start[g]`` is the first
+    # block group g covers — its items span ``[group_start, shared_blocks)``
+    # and flat grouping always has start 0, so ``shared_blocks`` keeps its
+    # historical "blocks shared" meaning there.  ``req_chains[r]`` lists
+    # every ``(group, slot)`` covering request r, ascending start block —
+    # a request under nested divergence combines one prefix partial per
+    # chain entry.  ``None`` means "derive from group_of_req" (flat).
+    group_start: np.ndarray | None = None  # (n_groups,)
+    req_chains: tuple | None = None  # (B,) of ((g, slot), ...)
+
+    def chain_of_req(self, r: int) -> tuple:
+        """``((group, slot), ...)`` covering request ``r``, outermost
+        first; falls back to the single flat group when chains are absent."""
+        if self.req_chains is not None:
+            return self.req_chains[r]
+        g = int(self.group_of_req[r])
+        if g < 0:
+            return ()
+        return ((g, int(self.slot_of_req[r])),)
+
+    def start_of_group(self, g: int) -> int:
+        return 0 if self.group_start is None else int(self.group_start[g])
+
+
+def _common_run(sigs, members, rep, start: int) -> int:
+    """Exclusive end of the longest block run all ``members`` share with
+    ``rep`` given they already agree on ``[0, start)``."""
+    n = len(sigs[rep])
+    for m in members:
+        if m == rep:
+            continue
+        k = start
+        mlim = min(n, len(sigs[m]))
+        while k < mlim and sigs[m][k] == sigs[rep][k]:
+            k += 1
+        n = min(n, k)
+    return n
+
+
+def _nested_group_list(sigs, min_group: int) -> list[tuple]:
+    """Trie-topology grouping: ``(members, start, end)`` per inner node.
+
+    Recursive partition refinement over the block signatures: a bucket of
+    requests sharing block ``start`` is scored once over its common run
+    ``[start, end)``, then sub-partitioned by block ``end`` — so a shared
+    system prompt under nested divergence (n-best families forking a
+    template forking a system prompt) is DMA'd once per *trie node*, not
+    once per pairwise common-min group.  Every bucket level honors
+    ``min_group``; sub-buckets too small fall through to the suffix pass.
+    """
+    floor = max(min_group, 2)
+    out: list[tuple] = []
+    by_first: dict[tuple, list[int]] = {}
+    for r, sig in enumerate(sigs):
+        if sig:
+            by_first.setdefault(sig[0], []).append(r)
+    stack = [
+        (members, 0)
+        for members in by_first.values()
+        if len(members) >= floor
+    ]
+    while stack:
+        members, start = stack.pop()
+        end = _common_run(sigs, members, members[0], start)
+        if end > start:
+            out.append((members, start, end))
+        sub: dict[tuple, list[int]] = {}
+        for m in members:
+            if len(sigs[m]) > end:
+                sub.setdefault(sigs[m][end], []).append(m)
+        for bucket in sub.values():
+            if len(bucket) >= floor:
+                stack.append((bucket, end))
+    # Deterministic order: outer groups first, then by member list.
+    out.sort(key=lambda t: (t[1], t[0]))
+    return out
 
 
 def find_prefix_groups(
@@ -217,6 +293,7 @@ def find_prefix_groups(
     page_size: int,
     block_k: int,
     min_group: int = 2,
+    nested: bool = False,
 ) -> PrefixGroups:
     """Group requests whose tables alias the same leading KV-block pages.
 
@@ -227,6 +304,13 @@ def find_prefix_groups(
     Members joining on block 0 but diverging later share only the common
     run (min over members); requests with no complete first block, or whose
     first block nobody else aliases, stay ungrouped.
+
+    ``nested=True`` recurses past each divergence point (the radix-trie
+    topology): sub-families that keep sharing beyond the whole-group
+    common run get their own deeper groups over ``[start, end)`` block
+    windows, and each request records the full chain of groups covering
+    it (:attr:`PrefixGroups.req_chains`).  Flat mode is the PR 3 behavior
+    and keeps ``group_start`` all-zero.
     """
     if block_k % page_size or block_k < page_size:
         raise ValueError(
@@ -246,43 +330,43 @@ def find_prefix_groups(
                 for j in range(nb_full)
             ]
         )
-    by_first: dict[tuple, list[int]] = {}
-    for r in range(b):
-        if sigs[r]:
-            by_first.setdefault(sigs[r][0], []).append(r)
+    if nested:
+        group_list = _nested_group_list(sigs, min_group)
+    else:
+        by_first: dict[tuple, list[int]] = {}
+        for r in range(b):
+            if sigs[r]:
+                by_first.setdefault(sigs[r][0], []).append(r)
+        group_list = []
+        for members in by_first.values():
+            if len(members) < max(min_group, 2):
+                continue
+            n = _common_run(sigs, members, members[0], 0)
+            if n >= 1:
+                group_list.append((members, 0, n))
 
-    members_list, shared_list = [], []
-    for members in by_first.values():
-        if len(members) < max(min_group, 2):
-            continue
-        rep = members[0]
-        n = len(sigs[rep])
-        for m in members[1:]:
-            k = 0
-            mlim = min(n, len(sigs[m]))
-            while k < mlim and sigs[m][k] == sigs[rep][k]:
-                k += 1
-            n = min(n, k)
-        if n >= 1:
-            members_list.append(members)
-            shared_list.append(n)
-
-    num_groups = len(members_list)
-    gmax = max((len(m) for m in members_list), default=0)
+    num_groups = len(group_list)
+    gmax = max((len(m) for m, _, _ in group_list), default=0)
     group_member = np.full((num_groups, max(gmax, 1)), -1, np.int32)
     group_size = np.zeros((num_groups,), np.int32)
     group_rep = np.zeros((num_groups,), np.int32)
     shared_blocks = np.zeros((num_groups,), np.int32)
+    group_start = np.zeros((num_groups,), np.int32)
     group_of_req = np.full((b,), -1, np.int32)
     slot_of_req = np.full((b,), -1, np.int32)
-    for g, members in enumerate(members_list):
+    chains: list[list[tuple]] = [[] for _ in range(b)]
+    for g, (members, start, end) in enumerate(group_list):
         group_size[g] = len(members)
         group_rep[g] = members[0]
-        shared_blocks[g] = shared_list[g]
+        shared_blocks[g] = end
+        group_start[g] = start
         for i, r in enumerate(members):
             group_member[g, i] = r
+            # group_of_req/slot_of_req keep the DEEPEST covering group —
+            # group_list is start-ascending, so the last write wins.
             group_of_req[r] = g
             slot_of_req[r] = i
+            chains[r].append((g, i))
     return PrefixGroups(
         group_member=group_member,
         group_size=group_size,
@@ -292,6 +376,8 @@ def find_prefix_groups(
         slot_of_req=slot_of_req,
         gmax=gmax,
         num_groups=num_groups,
+        group_start=group_start,
+        req_chains=tuple(tuple(c) for c in chains),
     )
 
 
@@ -329,26 +415,31 @@ class PrefixSchedule:
         prefix pass's ``(D_pref, gmax*G, ·)`` output, reshaped to
         ``(D_pref * gmax, G, ·)``, appends member rows at
         ``suffix.num_dest_slots + dest * gmax + slot``.  Returns
-        ``(dest_table (B, num_splits + 1), n_splits (B,))`` — each grouped
-        request combines its suffix splits plus exactly one prefix partial.
+        ``(dest_table (B, S), n_splits (B,))`` with
+        ``S = num_splits + max_chain_len`` — each grouped request combines
+        its suffix splits plus one prefix partial **per group in its
+        chain** (flat schedules have chains of length <= 1, reproducing the
+        historical ``num_splits + 1`` width).  The combine kernel's grid is
+        driven by the table shape, so no kernel change is needed.
         """
         suf = self.suffix
         b = suf.num_requests
         d_suf = suf.num_dest_slots
         gmax = max(self.groups.gmax, 1)
-        s_ext = suf.num_splits + 1
+        max_chain = max(
+            (len(self.groups.chain_of_req(r)) for r in range(b)), default=0
+        )
+        s_ext = suf.num_splits + max(max_chain, 1)
         dest = np.zeros((b, s_ext), np.int32)
         n_ext = np.zeros((b,), np.int32)
         for r in range(b):
             slots = [
                 int(suf.dest_table[r, j]) for j in range(int(suf.n_splits[r]))
             ]
-            g = int(self.groups.group_of_req[r])
-            if g >= 0 and self.groups.shared_blocks[g] > 0:
-                # prefix pass dest slot for group g is g (num_splits == 1)
-                slots.append(
-                    d_suf + g * gmax + int(self.groups.slot_of_req[r])
-                )
+            for g, slot in self.groups.chain_of_req(r):
+                if self.groups.shared_blocks[g] > self.groups.start_of_group(g):
+                    # prefix pass dest slot for group g is g (num_splits==1)
+                    slots.append(d_suf + g * gmax + int(slot))
             n_ext[r] = len(slots)
             if not slots:  # kv_len == 0: gated off, fetch warm slot 0
                 slots = [0]
@@ -367,12 +458,21 @@ def build_prefix_schedule(
     num_splits: int = 1,
     queue_bucket: int = DEFAULT_QUEUE_BUCKET,
     min_group: int = 2,
+    nested: bool = False,
 ) -> PrefixSchedule:
     """Group-batched shared-prefix schedule over ``(kv_lens, block_tables)``.
 
     Host-side like everything in this module; cost is O(total pages).  With
     no aliased prefixes anywhere this degenerates to the plain schedule
     (empty prefix pass, suffix pass == :func:`build_schedule`).
+
+    With ``nested=True`` grouping follows the radix-trie topology
+    (:func:`find_prefix_groups`): each trie inner node becomes a group over
+    its ``[start, end)`` block window — the prefix pass's per-group
+    ``start_blocks`` skip the window already covered by ancestor groups,
+    and each request's suffix starts past its *deepest* group.  Partials
+    from every group in a request's chain plus its suffix tile ``[0,
+    kv_len)`` exactly once and merge exactly in the LSE combine.
     """
     kv = np.asarray(kv_lens, np.int64).reshape(-1)
     groups = find_prefix_groups(
@@ -381,11 +481,16 @@ def build_prefix_schedule(
         page_size=page_size,
         block_k=block_k,
         min_group=min_group,
+        nested=nested,
     )
     start_blocks = np.zeros((kv.shape[0],), np.int64)
     for g in range(groups.num_groups):
         for i in range(int(groups.group_size[g])):
-            start_blocks[groups.group_member[g, i]] = groups.shared_blocks[g]
+            r = int(groups.group_member[g, i])
+            # Deepest covering group wins (nested chains ascend in end).
+            start_blocks[r] = max(
+                start_blocks[r], int(groups.shared_blocks[g])
+            )
     suffix = build_schedule(
         kv,
         block_k=block_k,
@@ -397,12 +502,15 @@ def build_prefix_schedule(
     prefix = None
     if groups.num_groups:
         # Prefix items never split: one dest slot per group keeps the
-        # stacked-query state walk trivially contiguous.
+        # stacked-query state walk trivially contiguous.  Each group's
+        # items cover only its own window: kv_len = end * block_k with
+        # start_blocks = start (all-zero in flat mode).
         prefix = build_schedule(
             prefix_lens,
             block_k=block_k,
             num_splits=1,
             queue_bucket=queue_bucket,
+            start_blocks=groups.group_start.astype(np.int64),
         )
     return PrefixSchedule(
         suffix=suffix,
@@ -442,11 +550,13 @@ class DecodeScheduler:
         num_splits: int = 1,
         queue_bucket: int = DEFAULT_QUEUE_BUCKET,
         min_group: int = 2,
+        nested: bool = False,
     ):
         self.block_k = block_k
         self.num_splits = num_splits
         self.queue_bucket = queue_bucket
         self.min_group = min_group
+        self.nested = nested
         self._key: tuple | None = None
         self._cached: DecodeSchedule | PrefixSchedule | None = None
         self.hits = 0
@@ -510,6 +620,7 @@ class DecodeScheduler:
         )
         key = (
             "prefix",
+            self.nested,
             kv_lens.shape[0],
             _block_signature(kv_lens, self.block_k),
             page_sig,
@@ -525,6 +636,7 @@ class DecodeScheduler:
                 num_splits=self.num_splits,
                 queue_bucket=self.queue_bucket,
                 min_group=self.min_group,
+                nested=self.nested,
             ),
         )
 
@@ -615,10 +727,15 @@ def prefix_queue_grid_items(
             for l, s in zip(kv_lens, ps.start_blocks)
         )
     )
-    prefix_pages = int(np.sum(ps.groups.shared_blocks)) * n_sub
-    unshared_prefix_pages = (
-        int(np.sum(ps.groups.shared_blocks * ps.groups.group_size)) * n_sub
-    )
+    # Each group DMAs only its own [start, end) window — ancestor groups in
+    # a nested chain already covered [0, start).  Flat schedules have
+    # group_start == 0 everywhere, reducing to shared_blocks outright.
+    gs = ps.groups.group_start
+    if gs is None:
+        gs = np.zeros_like(ps.groups.shared_blocks)
+    span = ps.groups.shared_blocks - gs
+    prefix_pages = int(np.sum(span)) * n_sub
+    unshared_prefix_pages = int(np.sum(span * ps.groups.group_size)) * n_sub
     grid_steps = ps.suffix.queue_len + (
         ps.prefix.queue_len if ps.prefix is not None else 0
     )
@@ -647,7 +764,11 @@ def prefix_queue_grid_items(
 
 
 def route_request(
-    shard_live_blocks, shard_free_pages, pages_needed: int, shard_ok=None
+    shard_live_blocks,
+    shard_free_pages,
+    pages_needed: int,
+    shard_ok=None,
+    shard_hit_pages=None,
 ):
     """Pick the data shard to admit a new request onto.
 
@@ -657,6 +778,14 @@ def route_request(
     can hold ``pages_needed`` pages, pick the least-loaded by live block
     count; break ties toward more free pages, then the lowest index (so
     an empty fleet fills deterministically shard 0, 1, ...).
+
+    ``shard_hit_pages[i]`` (optional) is the prefix-trie hit for this
+    request on shard i, in pages.  Hit pages are aliased rather than
+    allocated, so eligibility needs only ``pages_needed - hit`` free pages,
+    and ties in live blocks break toward the *longest hit* first — prefix
+    locality beats free-pool slack because the hit pages are DMA and
+    prefill the shard never pays.  Tries are shard-local, so this is the
+    only place cross-shard hit lengths compete.
 
     ``shard_ok[i]`` (optional) masks admissibility: draining shards finish
     their live requests but take no new ones, dead shards take nothing —
@@ -669,9 +798,10 @@ def route_request(
     for i, (blocks, free) in enumerate(zip(shard_live_blocks, shard_free_pages)):
         if shard_ok is not None and not shard_ok[i]:
             continue
-        if free < pages_needed:
+        hit = int(shard_hit_pages[i]) if shard_hit_pages is not None else 0
+        if free < max(pages_needed - hit, 0):
             continue
-        key = (int(blocks), -int(free), i)
+        key = (int(blocks), -hit, -int(free), i)
         if best is None or key < best[0]:
             best = (key, i)
     return None if best is None else best[1]

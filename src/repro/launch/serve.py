@@ -102,6 +102,8 @@ def _build_session(args, cfg, model, params):
             kv_dtype=args.kv_dtype,
             speculate=args.speculate,
             draft_k=args.draft_k,
+            prefix_cache=args.prefix_cache,
+            retain_pages=args.retain_pages,
         )
     if args.cache == "paged":
         return PagedServingSession(
@@ -116,6 +118,8 @@ def _build_session(args, cfg, model, params):
             kv_dtype=args.kv_dtype,
             speculate=args.speculate,
             draft_k=args.draft_k,
+            prefix_cache=args.prefix_cache,
+            retain_pages=args.retain_pages,
         )
     if args.kv_dtype is not None:
         raise SystemExit("--kv-dtype needs --cache paged (dense caches "
@@ -253,6 +257,9 @@ def _serve_supervised(sess, pending, args):
             raise SystemExit(
                 f"page leak on shard {i} after drain: {sweep}"
             )
+    # Full teardown (clears retained trie prefixes, asserts a fully free
+    # pool) — close() raises on any leak the per-cache sweep can't see.
+    sess.close()
     if len(results) != args.requests:
         raise SystemExit(
             f"lost requests: {args.requests - len(results)} of "
@@ -333,6 +340,18 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", action="store_true",
                     help="paged only: serve a forked system-prompt family "
                     "with group-batched prefix attention")
+    ap.add_argument("--prefix-cache", choices=("off", "trie"), default="off",
+                    help="paged only: automatic longest-prefix reuse via a "
+                    "radix trie over §4.2 page runs — admissions alias "
+                    "matched blocks zero-copy and prefill only the tail; "
+                    "finished prompts retain their prefix pages (LRU-"
+                    "evicted under pool pressure).  Greedy outputs are "
+                    "identical to off; the prompt stream here gets a "
+                    "shared template so hits actually occur")
+    ap.add_argument("--retain-pages", type=int, default=None,
+                    help="prefix-cache trie: cap on pages pinned by "
+                    "retained (non-live) prefixes; default = unbounded "
+                    "(pool pressure still reclaims LRU subtrees)")
     ap.add_argument("--mesh", default=None,
                     help="paged only: DxM serving mesh, e.g. 2x1 — shard "
                     "the page pool + decode queue over D data shards with "
@@ -360,6 +379,11 @@ def main(argv=None):
         raise SystemExit("--speculate needs --cache paged (rollback rides "
                          "the paged pool's refcounted truncate; dense slots "
                          "have no page bookkeeping to roll back)")
+    if args.prefix_cache != "off" and args.cache != "paged":
+        raise SystemExit("--prefix-cache needs --cache paged (the trie "
+                         "pins refcounted pages; dense slots have none)")
+    if args.retain_pages is not None and args.prefix_cache == "off":
+        raise SystemExit("--retain-pages needs --prefix-cache trie")
     if args.mesh:
         if args.cache != "paged":
             raise SystemExit("--mesh needs --cache paged (the dense backend "
@@ -397,8 +421,18 @@ def main(argv=None):
         return
 
     rng = np.random.default_rng(args.seed)
+    template = []
+    if args.prefix_cache == "trie":
+        # Multi-tenant template traffic: every prompt opens with the same
+        # block-aligned system template, so repeated admissions hit the
+        # trie instead of re-prefilling it.
+        sess0 = sess.shards[0] if args.mesh else sess
+        template = rng.integers(
+            2, cfg.vocab_size, size=2 * sess0.block_k
+        ).tolist()
     pending = [
-        rng.integers(2, cfg.vocab_size, size=int(rng.integers(4, 24))).tolist()
+        template
+        + rng.integers(2, cfg.vocab_size, size=int(rng.integers(4, 24))).tolist()
         for _ in range(args.requests)
     ]
     if args.chaos is not None or args.deadline is not None:
@@ -431,6 +465,17 @@ def main(argv=None):
                 f"{work['page_dma_bytes_per_accepted_token'] / 1e3:.2f} KB "
                 f"page DMA per accepted token"
             )
+        if args.prefix_cache == "trie":
+            print(
+                f"prefix cache: {work['trie_hits']}/{work['trie_admissions']}"
+                f" admissions hit ({work['trie_hit_rate']:.2f} hit rate), "
+                f"{work['prefix_tokens_reused']} prefix tokens reused "
+                f"({work['prefix_tokens_reused_per_admission']:.1f}/adm); "
+                f"pool: {work['live_pages']} live / "
+                f"{work['retained_pages']} retained / "
+                f"{work['free_pages']} free pages, "
+                f"{work['trie_evicted_pages']} evicted"
+            )
         if args.mesh:
             bal = work["balance"]
             for i, st in enumerate(work["per_shard"]):
@@ -443,6 +488,10 @@ def main(argv=None):
                 f"shard work balance: max/mean = {bal['imbalance']:.2f} "
                 f"({bal['max']:.0f}/{bal['mean']:.1f} page DMAs)"
             )
+        # Teardown leak audit in every paged run: close() clears the trie
+        # and refcount-sweeps the pool — a leaked page exits nonzero here.
+        sweep = sess.close()
+        print(f"teardown sweep: {sweep['free_pages']} pages free (clean)")
 
 
 if __name__ == "__main__":

@@ -46,6 +46,7 @@ __all__ = [
     "LayeredPagedKVCache",
     "OutOfPagesError",
     "PagedKVCache",
+    "PrefixTrie",
 ]
 
 
@@ -255,6 +256,12 @@ class PagedKVCache:
         # Owners per physical page: 0 = on the free list, >1 = aliased by a
         # fork.  Host-side numpy, like all page bookkeeping.
         self._ref = np.zeros((num_pages,), np.int32)
+        # Retention pins per page: references held by a prefix cache
+        # (PrefixTrie) rather than by a live sequence.  Every pin is also
+        # counted in ``_ref`` — a pinned page cannot return to the free
+        # list — so refcount_sweep can reconcile exactly:
+        # ``_ref == sequence owners + _pin`` for every page.
+        self._pin = np.zeros((num_pages,), np.int32)
 
     # ------------------------------------------------------------------ #
     # bookkeeping
@@ -374,6 +381,84 @@ class PagedKVCache:
         self._seq_pages[dst] = list(shared)
         self._seq_len[dst] = prefix_len
 
+    # -- retention (prefix-cache) references ---------------------------- #
+    def pin_pages(self, pids) -> None:
+        """Take a retention reference on each of ``pids``.
+
+        The prefix trie's hold: a pinned page survives every sequence
+        owner releasing it (``free``/``truncate`` just decrement the
+        refcount), so a finished request's prefix pages stay resident and
+        re-admittable until :meth:`unpin_pages`.  Pages must be live —
+        pinning is only legal while some owner (the finishing request)
+        still holds them, which is what keeps a free-list page from ever
+        being resurrected.
+        """
+        pids = [int(p) for p in pids]
+        for pid in pids:
+            if self._ref[pid] < 1:
+                raise ValueError(
+                    f"cannot pin page {pid}: it is on the free list (pin "
+                    "pages before their last sequence owner releases them)"
+                )
+        for pid in pids:
+            self._ref[pid] += 1
+            self._pin[pid] += 1
+
+    def unpin_pages(self, pids) -> None:
+        """Drop retention references; pages whose last owner was the pin
+        return to the free list."""
+        pids = [int(p) for p in pids]
+        for pid in pids:
+            if self._pin[pid] < 1:
+                raise ValueError(f"page {pid} holds no retention pin")
+        for pid in pids:
+            self._pin[pid] -= 1
+            self._release_page(pid)
+
+    def adopt_pages(self, rid: int, pids, n_rows: int) -> None:
+        """Register ``rid`` as a new sequence aliasing ``pids`` (a prefix-
+        cache hit): :meth:`fork` from a page list instead of a live parent.
+
+        ``n_rows`` must exactly fill the adopted pages (prefix-cache hits
+        are complete-block — hence page — aligned), so the next append
+        starts on a fresh page and never copy-on-write-faults an adopted
+        page mid-admission.
+        """
+        if rid in self._seq_pages:
+            raise KeyError(f"sequence {rid} already allocated")
+        pids = [int(p) for p in pids]
+        if n_rows != len(pids) * self.page_size:
+            raise ValueError(
+                f"adopt_pages needs page-aligned rows: {n_rows} rows do "
+                f"not fill {len(pids)} pages of {self.page_size}"
+            )
+        for pid in pids:
+            if self._ref[pid] < 1:
+                raise ValueError(
+                    f"cannot adopt page {pid}: it is on the free list"
+                )
+        for pid in pids:
+            self._ref[pid] += 1
+        self._seq_pages[rid] = list(pids)
+        self._seq_len[rid] = n_rows
+
+    def pool_occupancy(self) -> dict:
+        """Page census: sequence-owned vs retained-only vs free.
+
+        ``retained_pages`` counts pages whose *only* remaining owners are
+        retention pins — resident purely as prefix cache; ``live_pages``
+        counts pages some sequence still references (possibly pinned too).
+        The three always sum to ``num_pages``.
+        """
+        live = int(np.sum(self._ref > self._pin))
+        retained = int(np.sum((self._ref > 0) & (self._ref == self._pin)))
+        return {
+            "live_pages": live,
+            "retained_pages": retained,
+            "free_pages": self.num_free_pages,
+            "pinned_pages": int(np.sum(self._pin > 0)),
+        }
+
     def truncate(self, rid: int, n: int) -> None:
         """Roll ``rid`` back to its first ``n`` rows (speculative rollback).
 
@@ -435,16 +520,21 @@ class PagedKVCache:
         run this after every suspend/replay storm: "no pool pages leak"
         is gated here, not inferred from ``num_free_pages``.
         """
-        expected = np.zeros(self.num_pages, dtype=np.int64)
+        seq_owned = np.zeros(self.num_pages, dtype=np.int64)
         for rid, pages in self._seq_pages.items():
             for pid in pages:
-                expected[pid] += 1
+                seq_owned[pid] += 1
+        # Retention pins are owners too: a page's refcount must equal its
+        # sequence owners plus its prefix-cache pins, exactly.
+        expected = seq_owned + self._pin.astype(np.int64)
         bad = np.nonzero(expected != self._ref)[0]
         assert bad.size == 0, (
             f"refcount mismatch on pages {bad.tolist()[:8]}: "
             f"expected {expected[bad].tolist()[:8]} owners from the "
-            f"sequence tables, _ref says {self._ref[bad].tolist()[:8]}"
+            f"sequence tables + pins, _ref says {self._ref[bad].tolist()[:8]}"
         )
+        neg = np.nonzero(self._pin < 0)[0]
+        assert neg.size == 0, f"negative pin count on pages {neg.tolist()[:8]}"
         free = list(self._free)
         free_set = set(free)
         assert len(free) == len(free_set), (
@@ -457,7 +547,10 @@ class PagedKVCache:
             f"unowned but not free (leaked)"
         )
         return {
-            "live_pages": int(np.sum(expected > 0)),
+            "live_pages": int(np.sum(seq_owned > 0)),
+            "retained_pages": int(
+                np.sum((seq_owned == 0) & (self._pin > 0))
+            ),
             "free_pages": len(free),
             "aliased_pages": int(np.sum(expected > 1)),
             "live_sequences": len(self._seq_pages),
@@ -799,3 +892,310 @@ class LayeredPagedKVCache(PagedKVCache):
                 ..., None
             ]
         return out[:, :n] if layer is None else out[:n]
+
+
+# --------------------------------------------------------------------------- #
+# radix prefix trie — token-keyed retention over §4.2-aligned page runs
+# --------------------------------------------------------------------------- #
+
+
+class _TrieNode:
+    """One radix edge: a run of complete KV blocks and the pages holding it.
+
+    ``blocks`` is the edge label — a sequence of block-sized token tuples —
+    and ``pages`` the physical page ids whose rows are those tokens' latent
+    states (``len(pages) == len(blocks) * pages_per_block``, exactly).  The
+    node owns one retention pin per page; children are keyed by their
+    edge's *first block* (block-granular radix: two prefixes diverging
+    inside a block share nothing cacheable, so sub-block branching never
+    needs representing).
+    """
+
+    __slots__ = ("blocks", "pages", "children", "parent", "last_used")
+
+    def __init__(self, blocks, pages, parent):
+        self.blocks: list[tuple] = list(blocks)
+        self.pages: list[int] = list(pages)
+        self.children: dict[tuple, _TrieNode] = {}
+        self.parent: _TrieNode | None = parent
+        self.last_used = 0
+
+
+class PrefixTrie:
+    """Radix tree over cached prompt prefixes, at §4.2 KV-block granularity.
+
+    The lifecycle half of automatic prefix caching: finished requests
+    *retain* their prompt's complete-block pages here (one retention pin
+    per page, see :meth:`PagedKVCache.pin_pages`), admission *matches* a
+    new prompt token-by-token against the tree and aliases every matched
+    page zero-copy (:meth:`PagedKVCache.adopt_pages`), and a cost-aware
+    LRU evictor reclaims cold subtrees leaf-first when the pool or the
+    ``retain_pages`` budget demands it.
+
+    Block granularity is load-bearing three ways: (1) matched lengths are
+    multiples of ``block_tokens`` — which is a multiple of ``page_size`` —
+    so adoption is page-aligned and the divergent tail's first append
+    grabs a fresh page (no COW fault against a retained page, ever);
+    (2) trie hits are exactly the complete blocks the group-batched
+    prefix kernel can batch, so a hit feeds the nested prefix scheduler
+    unchanged; (3) two prompts diverging *inside* a block share no
+    cacheable state, so children key on whole block-token tuples and the
+    tree never represents sub-block branches.
+
+    ``epoch`` increments on every topology change (insert, split, evict);
+    the memoizing decode scheduler folds it into its key so retained-page
+    churn can never serve a stale schedule.  All bookkeeping is host-side
+    Python, O(blocks touched) per call, exactly like the page tables.
+    """
+
+    def __init__(
+        self,
+        cache: PagedKVCache,
+        *,
+        block_tokens: int,
+        retain_pages: int | None = None,
+    ):
+        if block_tokens < 1 or block_tokens % cache.page_size:
+            raise ValueError(
+                f"block_tokens={block_tokens} must be a positive multiple "
+                f"of the cache page_size={cache.page_size} (trie nodes own "
+                "whole pages)"
+            )
+        if retain_pages is not None and retain_pages < 0:
+            raise ValueError(f"retain_pages must be >= 0, got {retain_pages}")
+        self.cache = cache
+        self.block_tokens = int(block_tokens)
+        self.pages_per_block = block_tokens // cache.page_size
+        self.retain_pages = retain_pages
+        self.root = _TrieNode((), (), None)
+        self.epoch = 0
+        self._clock = 0
+        self.pinned_pages = 0
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0
+        self.inserted_nodes = 0
+        self.evicted_nodes = 0
+        self.evicted_pages = 0
+
+    # -- structure ------------------------------------------------------- #
+    def _blocks_of(self, tokens) -> list[tuple]:
+        bt = self.block_tokens
+        n = len(tokens) // bt
+        return [tuple(tokens[i * bt : (i + 1) * bt]) for i in range(n)]
+
+    @property
+    def num_nodes(self) -> int:
+        count, stack = 0, [self.root]
+        while stack:
+            node = stack.pop()
+            for child in node.children.values():
+                count += 1
+                stack.append(child)
+        return count
+
+    def _leaves(self) -> list[_TrieNode]:
+        out, stack = [], [self.root]
+        while stack:
+            node = stack.pop()
+            for child in node.children.values():
+                if child.children:
+                    stack.append(child)
+                else:
+                    out.append(child)
+        return out
+
+    def _freeable(self, node: _TrieNode) -> int:
+        """Pages of ``node`` whose only remaining owners are pins —
+        unpinning them actually returns pages to the free list."""
+        ref, pin = self.cache._ref, self.cache._pin
+        return sum(1 for p in node.pages if ref[p] == pin[p])
+
+    def _any_freeable(self) -> bool:
+        ref, pin = self.cache._ref, self.cache._pin
+        return bool(np.any((pin > 0) & (ref == pin)))
+
+    # -- lookup ---------------------------------------------------------- #
+    def match(self, tokens, *, touch: bool = True, count: bool = True):
+        """Longest cached prefix of ``tokens``: ``(matched_rows, pages)``.
+
+        Walks edges greedily; a partial edge match is usable as-is (the
+        edge's leading pages cover it) without splitting anything.  With
+        ``touch`` the walked nodes' LRU stamps refresh; ``touch=False,
+        count=False`` is the non-mutating probe the sharded router uses
+        to score shards before committing an admission.
+        """
+        blocks = self._blocks_of(tokens)
+        if touch:
+            self._clock += 1
+        node = self.root
+        pages: list[int] = []
+        i = 0
+        while i < len(blocks):
+            child = node.children.get(blocks[i])
+            if child is None:
+                break
+            k = 0
+            while (
+                k < len(child.blocks)
+                and i + k < len(blocks)
+                and child.blocks[k] == blocks[i + k]
+            ):
+                k += 1
+            if touch:
+                child.last_used = self._clock
+            pages.extend(child.pages[: k * self.pages_per_block])
+            i += k
+            if k < len(child.blocks):
+                break
+            node = child
+        matched = i * self.block_tokens
+        if count:
+            if matched:
+                self.hits += 1
+                self.hit_tokens += matched
+            else:
+                self.misses += 1
+        return matched, pages
+
+    # -- retention ------------------------------------------------------- #
+    def _split(self, node: _TrieNode, k: int) -> _TrieNode:
+        """Split ``node``'s edge after ``k`` blocks; returns the new top
+        half.  Pin counts are untouched — the same pages stay pinned once,
+        they just belong to two nodes now."""
+        ppb = self.pages_per_block
+        top = _TrieNode(node.blocks[:k], node.pages[: k * ppb], node.parent)
+        top.last_used = node.last_used
+        node.parent.children[top.blocks[0]] = top
+        node.blocks = node.blocks[k:]
+        node.pages = node.pages[k * ppb :]
+        node.parent = top
+        top.children[node.blocks[0]] = node
+        self.epoch += 1
+        return top
+
+    def insert(self, tokens, pages) -> int:
+        """Retain ``tokens``' complete blocks, backed by ``pages``.
+
+        Called at request finish time, **before** ``cache.free(rid)`` —
+        pins only legally stack on live pages.  Blocks already cached keep
+        their existing (bit-identical) pages; only the uncovered tail pins
+        new ones.  ``pages`` must be the request's leading page list
+        covering at least the complete blocks.  Returns how many pages
+        were newly pinned; enforces the ``retain_pages`` budget by LRU
+        eviction afterwards.
+        """
+        ppb = self.pages_per_block
+        blocks = self._blocks_of(tokens)
+        if len(pages) < len(blocks) * ppb:
+            raise ValueError(
+                f"insert of {len(blocks)} blocks needs "
+                f"{len(blocks) * ppb} pages, got {len(pages)}"
+            )
+        self._clock += 1
+        node = self.root
+        i = 0
+        pinned = 0
+        while i < len(blocks):
+            child = node.children.get(blocks[i])
+            if child is None:
+                tail_pages = [
+                    int(p) for p in pages[i * ppb : len(blocks) * ppb]
+                ]
+                self.cache.pin_pages(tail_pages)
+                fresh = _TrieNode(blocks[i:], tail_pages, node)
+                fresh.last_used = self._clock
+                node.children[blocks[i]] = fresh
+                self.pinned_pages += len(tail_pages)
+                pinned = len(tail_pages)
+                self.inserted_nodes += 1
+                self.epoch += 1
+                break
+            k = 0
+            while (
+                k < len(child.blocks)
+                and i + k < len(blocks)
+                and child.blocks[k] == blocks[i + k]
+            ):
+                k += 1
+            child.last_used = self._clock
+            if k < len(child.blocks):
+                if i + k == len(blocks):
+                    break  # ends inside the edge: already fully covered
+                child = self._split(child, k)
+            node = child
+            i += k
+        if self.retain_pages is not None:
+            self.trim_to_budget()
+        return pinned
+
+    # -- eviction -------------------------------------------------------- #
+    def _evict_node(self, node: _TrieNode) -> int:
+        """Unpin one leaf and detach it; returns pages actually freed."""
+        before = self.cache.num_free_pages
+        del node.parent.children[node.blocks[0]]
+        self.cache.unpin_pages(node.pages)
+        self.pinned_pages -= len(node.pages)
+        self.evicted_nodes += 1
+        self.evicted_pages += len(node.pages)
+        self.epoch += 1
+        return self.cache.num_free_pages - before
+
+    def reclaim(self, n_pages: int) -> int:
+        """Evict cold subtrees until >= ``n_pages`` returned to the free
+        list (pool pressure).  Cost-aware LRU, leaf-first: among leaves,
+        prefer ones whose pages actually free (no live request aliases
+        them), oldest ``last_used`` first; a zero-yield leaf is evicted
+        only to unlock a freeable ancestor.  Stops — returning what it
+        got — when nothing pinned anywhere can free a page, so retention
+        of still-aliased prefixes is never torn down pointlessly."""
+        freed = 0
+        while freed < int(n_pages) and self._any_freeable():
+            leaves = self._leaves()
+            if not leaves:
+                break
+            victim = min(
+                leaves,
+                key=lambda n: (self._freeable(n) == 0, n.last_used),
+            )
+            freed += self._evict_node(victim)
+        return freed
+
+    def trim_to_budget(self) -> int:
+        """LRU-evict until ``pinned_pages <= retain_pages`` (no-op when
+        unbudgeted).  Returns pages returned to the free list."""
+        if self.retain_pages is None:
+            return 0
+        freed = 0
+        while self.pinned_pages > self.retain_pages:
+            leaves = self._leaves()
+            if not leaves:
+                break
+            freed += self._evict_node(
+                min(leaves, key=lambda n: n.last_used)
+            )
+        return freed
+
+    def clear(self) -> int:
+        """Evict everything (session teardown); returns pages freed."""
+        freed = 0
+        while True:
+            leaves = self._leaves()
+            if not leaves:
+                return freed
+            for leaf in leaves:
+                freed += self._evict_node(leaf)
+
+    # -- introspection --------------------------------------------------- #
+    def stats(self) -> dict:
+        return {
+            "pinned_pages": self.pinned_pages,
+            "num_nodes": self.num_nodes,
+            "epoch": self.epoch,
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_tokens": self.hit_tokens,
+            "inserted_nodes": self.inserted_nodes,
+            "evicted_nodes": self.evicted_nodes,
+            "evicted_pages": self.evicted_pages,
+        }

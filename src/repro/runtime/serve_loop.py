@@ -335,11 +335,13 @@ class PagedServingSession:
         speculate: str = "off",
         draft_k: int = 4,
         draft_proposer=None,
+        prefix_cache: str = "off",
+        retain_pages: int | None = None,
     ):
         from repro.kernels import ops
         from repro.kernels.decode_schedule import DecodeScheduler
         from repro.models import transformer as _tf
-        from repro.runtime.kv_cache import CacheSpec
+        from repro.runtime.kv_cache import CacheSpec, PrefixTrie
 
         _tf.check_paged_compatible(model.cfg)
         if model.cfg.n_heads % head_shards:
@@ -385,6 +387,34 @@ class PagedServingSession:
         self.prefix_sharing = prefix_sharing
         self.prefill_chunk = prefill_chunk
         self.max_batch = max_batch
+        if prefix_cache not in ("off", "trie"):
+            raise ValueError(
+                f"prefix_cache={prefix_cache!r} is not a cache policy; "
+                "pick 'off' or 'trie'"
+            )
+        self.prefix_cache = prefix_cache
+        self.trie = None
+        if prefix_cache == "trie":
+            # Trie hits alias complete §4.2 blocks, so a warm admission's
+            # suffix prefill restarts exactly at a block boundary.  With
+            # the chunk dividing block_k, those warm chunk boundaries
+            # coincide with a cold prefill's — the cached rows and the
+            # greedy stream stay bit-identical to trie-off serving.
+            if self.block_k % prefill_chunk:
+                raise ValueError(
+                    f"prefix_cache='trie' needs prefill_chunk "
+                    f"({prefill_chunk}) to divide block_k ({self.block_k}) "
+                    "so warm suffix prefills land on the same chunk "
+                    "boundaries as cold ones (bit-identical outputs)"
+                )
+            # Trie hits only pay off when the scheduler groups the aliased
+            # blocks; nested grouping scores each trie node once.
+            self.prefix_sharing = True
+            self.trie = PrefixTrie(
+                self.cache,
+                block_tokens=self.block_k,
+                retain_pages=retain_pages,
+            )
         self.interpret = (
             interpret
             if interpret is not None
@@ -395,7 +425,10 @@ class PagedServingSession:
         # serving uses the kernels' native bf16.
         self.compute_dtype = jnp.float32 if self.dtype == jnp.float32 else None
         self._scheduler = DecodeScheduler(
-            block_k=self.block_k, num_splits=num_splits, min_group=min_group
+            block_k=self.block_k,
+            num_splits=num_splits,
+            min_group=min_group,
+            nested=self.trie is not None,
         )
         self._layers = _tf.per_layer_params(params, model.cfg)
         if speculate not in ("off", "ngram"):
@@ -448,6 +481,7 @@ class PagedServingSession:
         self.resumes = 0
         self.replay_prefill_tokens = 0
         self.replay_mismatches = 0
+        self.trie_admissions = 0
 
     # -- introspection ------------------------------------------------- #
     @property
@@ -487,6 +521,13 @@ class PagedServingSession:
         page_dma_bytes = self.page_dmas * self.cache_spec.bytes_per_page(
             self.cache.page_size, self.cache.width
         )
+        occ = self.cache.pool_occupancy()
+        if self.trie is not None:
+            ts = self.trie.stats()
+            trie_hits, trie_misses = ts["hits"], ts["misses"]
+            reused, evicted = ts["hit_tokens"], ts["evicted_pages"]
+        else:
+            trie_hits = trie_misses = reused = evicted = 0
         return {
             "decode_steps": self.decode_steps,
             "request_steps": self.request_steps,
@@ -501,6 +542,18 @@ class PagedServingSession:
             "rows_attended": self.rows_attended,
             "aliased_pages": self.cache.num_aliased_pages(),
             "free_pages": self.cache.num_free_pages,
+            # Pool occupancy + trie reuse (all-zero with the trie off, so
+            # the key set is stable and the sharded aggregator can sum).
+            "live_pages": occ["live_pages"],
+            "retained_pages": occ["retained_pages"],
+            "trie_hits": trie_hits,
+            "trie_misses": trie_misses,
+            "trie_admissions": self.trie_admissions,
+            "trie_hit_rate": trie_hits / max(trie_hits + trie_misses, 1),
+            "prefix_tokens_reused": reused,
+            "prefix_tokens_reused_per_admission": reused
+            / max(self.trie_admissions, 1),
+            "trie_evicted_pages": evicted,
             "suspends": self.suspends,
             "resumes": self.resumes,
             "suspended": len(self.suspended),
@@ -517,7 +570,14 @@ class PagedServingSession:
 
     def add_request(self, prompt_tokens) -> int | None:
         """Chunk-prefill a prompt into fresh pages; rid, or None when the
-        pool lacks pages / the batch is full (caller queues and retries)."""
+        pool lacks pages / the batch is full (caller queues and retries).
+
+        With ``prefix_cache="trie"`` admission is automatic longest-prefix
+        reuse: the prompt's complete §4.2 blocks are matched against the
+        radix trie, every matched block's pages are adopted zero-copy
+        (refcount bumps over all layers, exactly like :meth:`fork`), and
+        only the divergent tail prefills — no caller-named parent needed.
+        """
         from repro.models import transformer as _tf
 
         prompt = list(map(int, prompt_tokens))
@@ -536,18 +596,42 @@ class PagedServingSession:
             )
         if self.max_batch is not None and len(self.active) >= self.max_batch:
             return None
-        if not self.cache.has_room(None, len(prompt)):
-            return None
+        matched = 0
+        tpages: list[int] = []
+        if self.trie is None:
+            if not self.cache.has_room(None, len(prompt)):
+                return None
+        else:
+            # Position len(prompt)-1 must run through prefill (it emits the
+            # first logits row), so only blocks strictly before it can be
+            # reused.  ``matched`` is block-aligned, hence page-aligned.
+            usable = ((len(prompt) - 1) // self.block_k) * self.block_k
+            matched, tpages = self.trie.match(prompt[:usable])
+            self.trie_admissions += 1
         rid = self._next_id
         self._next_id += 1
-        self.cache.alloc(rid)
+        # Adopt BEFORE any reclaim: the adoption refs keep the matched
+        # pages alive (and off the evictor's freeable list) even if pool
+        # pressure evicts their trie node a moment later.
+        if matched:
+            self.cache.adopt_pages(rid, tpages, matched)
+        else:
+            self.cache.alloc(rid)
+        deficit = need - len(tpages) - self.cache.num_free_pages
+        if deficit > 0 and self.trie is not None:
+            # Cold retained subtrees make way before admission fails.
+            self.trie.reclaim(deficit)
+        if need - len(tpages) > self.cache.num_free_pages:
+            self.cache.free(rid)  # adoption refs drop; pins are untouched
+            return None
         self._prefill_shapes.add((1, self.prefill_chunk))
         logits = _tf.lm_prefill_paged(
             self.params,
-            prompt,
+            prompt[matched:],
             cfg=self.cfg,
             cache=self.cache,
             rid=rid,
+            start_pos=matched,
             chunk=self.prefill_chunk,
             table_width=self.table_width,
             block_k=self.block_k,
@@ -557,7 +641,30 @@ class PagedServingSession:
             head_shards=self.head_shards,
         )
         self._prompt[rid] = prompt
+        if self.trie is not None:
+            # Publish the *live* prefix immediately: leaves map to live or
+            # retained prefixes, so concurrent same-template admissions
+            # alias this request's pages without waiting for it to finish.
+            self._retain_prompt(rid)
         return self._admit(rid, int(jnp.argmax(logits[0])))
+
+    def _retain_prompt(self, rid: int) -> None:
+        """Pin ``rid``'s complete prompt blocks into the trie (idempotent:
+        blocks already covered add nothing).  Only :meth:`add_request`
+        prompts qualify: their rows are entirely prefill-written at
+        globally chunk-aligned boundaries, so a later admission adopting
+        them gets rows bit-identical to its own cold prefill.  Fork /
+        admit_with_prefix children are deliberately *not* retained —
+        their histories contain decode-written or non-aligned rows."""
+        prompt = self._prompt.get(rid, [])
+        n_blocks = len(prompt) // self.block_k
+        if not n_blocks:
+            return
+        ppb = self.block_k // self.cache.page_size
+        self.trie.insert(
+            prompt[: n_blocks * self.block_k],
+            self.cache.seq_pages(rid)[: n_blocks * ppb],
+        )
 
     def fork(self, rid: int, prefix_len: int | None = None) -> int:
         """Branch a live request at its full history: the child aliases
@@ -592,6 +699,13 @@ class PagedServingSession:
         are aliased (zero copies across all layers); only the suffix runs
         through the model, attending over the shared pages.  Returns None
         (nothing allocated) when the pool lacks pages for the suffix.
+
+        With ``prefix_cache="trie"`` this is a compatibility shim: plain
+        :meth:`add_request` already discovers the longest cached prefix
+        automatically (no parent rid needed) and covers the cross-request
+        case this method cannot (the parent may have finished).  Kept for
+        callers that want an explicit *live*-parent alias at a
+        non-block-aligned ``prefix_len``.
         """
         from repro.models import transformer as _tf
 
@@ -695,7 +809,14 @@ class PagedServingSession:
             rids=rids,
             scheduler=self._scheduler,
             prefix_sharing=self.prefix_sharing,
-            extra_key=tuple(rids),
+            # The trie epoch folds eviction/insert/split churn into the
+            # memo key: adopted-page aliasing changes grouping structure
+            # even when block counts and the live set look unchanged.
+            extra_key=(
+                (tuple(rids), self.trie.epoch)
+                if self.trie is not None
+                else tuple(rids)
+            ),
             table_width=self.table_width,
             block_k=self.block_k,
             num_splits=self.num_splits,
@@ -746,7 +867,14 @@ class PagedServingSession:
 
     def finish(self, rid: int) -> list[int]:
         """Retire ``rid``: pages return to the pool (aliased prefix pages
-        stay until their last owner goes); returns the generated tokens."""
+        stay until their last owner goes); returns the generated tokens.
+
+        With the trie on the request's prompt blocks were pinned at
+        admission (see :meth:`_retain_prompt`), so free() here demotes
+        them from *live* to *retained* — the pages never transit the free
+        list, and the next admission sharing the prompt prefix adopts
+        them instead of re-prefilling.
+        """
         if rid not in self.active:
             raise KeyError(f"request {rid} is not live")
         self.active.remove(rid)
@@ -911,6 +1039,36 @@ class PagedServingSession:
         self._ballast.discard(handle)
         self.cache.free(handle)
 
+    # -- prefix-cache lifecycle ----------------------------------------- #
+    def reclaim_retained(self, n_pages: int) -> int:
+        """Evict cold retained trie subtrees to free ``>= n_pages`` pages
+        (best effort; leaf-first LRU).  Returns the pages actually freed —
+        0 with the trie off or nothing freeable, which tells callers
+        (the :class:`ServeSupervisor` pool-pressure path) to fall back to
+        suspending a live request."""
+        if self.trie is None:
+            return 0
+        return self.trie.reclaim(n_pages)
+
+    def close(self) -> dict:
+        """Tear the session down and audit the pool: finish every live
+        request, release ballast, drop suspended records, clear the trie,
+        then :meth:`~repro.runtime.kv_cache.PagedKVCache.refcount_sweep`
+        — a page leak fails loudly here in every run, not only under
+        chaos.  Returns the sweep report."""
+        for rid in list(self.active):
+            self.finish(rid)
+        for handle in list(self._ballast):
+            self.release_pages(handle)
+        self.suspended.clear()
+        if self.trie is not None:
+            self.trie.clear()
+        report = self.cache.refcount_sweep()
+        assert report["free_pages"] == self.cache.num_pages, (
+            f"page leak at teardown: {report}"
+        )
+        return report
+
 
 class ShardedPagedServingSession:
     """Multi-host paged serving: the page pool + decode work queue sharded
@@ -969,6 +1127,8 @@ class ShardedPagedServingSession:
         speculate: str = "off",
         draft_k: int = 4,
         draft_proposer=None,
+        prefix_cache: str = "off",
+        retain_pages: int | None = None,
     ):
         if mesh is not None and shards is not None:
             raise ValueError("pass mesh= or shards=, not both")
@@ -1013,6 +1173,12 @@ class ShardedPagedServingSession:
                 speculate=speculate,
                 draft_k=draft_k,
                 draft_proposer=draft_proposer,
+                # The trie is shard-local (pages cannot alias across
+                # pools); the retention budget splits evenly like the pool.
+                prefix_cache=prefix_cache,
+                retain_pages=(
+                    None if retain_pages is None else retain_pages // n_data
+                ),
             )
             for dev in devices
         ]
@@ -1044,6 +1210,10 @@ class ShardedPagedServingSession:
             speculate=speculate,
             draft_k=draft_k,
             draft_proposer=draft_proposer,
+            prefix_cache=prefix_cache,
+            retain_pages=(
+                None if retain_pages is None else retain_pages // n_data
+            ),
         )
         # Suspended records live at this level: cross-shard resume must not
         # depend on a (possibly dead) origin shard's bookkeeping.
@@ -1093,11 +1263,30 @@ class ShardedPagedServingSession:
             )
         if self.max_batch is not None and len(self.active) >= self.max_batch:
             return None
+        # Probe each shard-local trie read-only (no LRU touch, no hit/miss
+        # accounting — only the winning shard's real admission counts):
+        # routing prefers prefix locality on live-block ties, and a shard
+        # whose hit covers most of the prompt is eligible even when its
+        # free pool alone could not hold it.
+        hit_pages = None
+        if any(s.trie is not None for s in self.shards):
+            usable = ((len(prompt) - 1) // self.block_k) * self.block_k
+            hit_pages = [
+                (
+                    len(s.trie.match(
+                        prompt[:usable], touch=False, count=False
+                    )[1])
+                    if s.trie is not None
+                    else 0
+                )
+                for s in self.shards
+            ]
         idx = route_request(
             [self._live_blocks(s) for s in self.shards],
             [s.cache.num_free_pages for s in self.shards],
             pages,
             shard_ok=[h == "healthy" for h in self._health],
+            shard_hit_pages=hit_pages,
         )
         if idx is None:
             return None  # no shard has room right now: evict and retry
@@ -1327,6 +1516,13 @@ class ShardedPagedServingSession:
                 "rows_attended",
                 "aliased_pages",
                 "free_pages",
+                "live_pages",
+                "retained_pages",
+                "trie_hits",
+                "trie_misses",
+                "trie_admissions",
+                "prefix_tokens_reused",
+                "trie_evicted_pages",
                 "suspends",
                 "resumes",
                 "replay_prefill_tokens",
@@ -1346,11 +1542,42 @@ class ShardedPagedServingSession:
         agg["page_dma_bytes_per_accepted_token"] = agg[
             "page_dma_bytes"
         ] / max(agg["accepted_tokens"], 1)
+        agg["trie_hit_rate"] = agg["trie_hits"] / max(
+            agg["trie_hits"] + agg["trie_misses"], 1
+        )
+        agg["prefix_tokens_reused_per_admission"] = agg[
+            "prefix_tokens_reused"
+        ] / max(agg["trie_admissions"], 1)
         agg["per_shard"] = per_shard
         agg["balance"] = shard_work_balance(
             [st["page_dmas"] for st in per_shard]
         )
         return agg
+
+    def reclaim_retained(self, n_pages: int) -> int:
+        """Evict cold retained subtrees across shards, fullest pool first,
+        until ``n_pages`` freed or nothing is freeable.  Returns pages
+        actually freed (see :meth:`PagedServingSession.reclaim_retained`)."""
+        freed = 0
+        for shard in sorted(self.shards, key=lambda s: s.cache.num_free_pages):
+            if freed >= n_pages:
+                break
+            freed += shard.reclaim_retained(n_pages - freed)
+        return freed
+
+    def close(self) -> dict:
+        """Per-shard teardown audit (:meth:`PagedServingSession.close`):
+        every shard pool must come back fully free."""
+        self.suspended.clear()
+        reports = [s.close() for s in self.shards]
+        self.active.clear()
+        self.outputs.clear()
+        self._where.clear()
+        self._gfamily.clear()
+        return {
+            "free_pages": sum(r["free_pages"] for r in reports),
+            "per_shard": reports,
+        }
 
 
 class ServeSupervisor:
@@ -1435,6 +1662,7 @@ class ServeSupervisor:
         self.tokens_out = 0
         self.admission_retries = 0
         self.evictions = 0
+        self.reclaims = 0
         self.faults_applied = 0
         self.faults_skipped = 0
         self.events: list[str] = []
@@ -1518,13 +1746,30 @@ class ServeSupervisor:
                 ):
                     self._abandon(rid)
             if oom:
-                victims = [
-                    r
-                    for r in steppable
-                    if r in self._live and r not in sess.suspended
-                ]
-                if victims:
-                    self._suspend_victim(victims)
+                # Retained prefix pages are the cheapest thing to give
+                # back — evicting a cold trie subtree costs a future
+                # re-prefill at worst, while suspending a live request
+                # costs a certain replay.  Only when nothing retained is
+                # freeable does a live victim get suspended.
+                reclaimed = 0
+                if hasattr(sess, "reclaim_retained"):
+                    reclaimed = sess.reclaim_retained(
+                        max(len(steppable), 1)
+                    )
+                if reclaimed > 0:
+                    self.reclaims += 1
+                    self.events.append(
+                        f"step {self.steps}: pool full — reclaimed "
+                        f"{reclaimed} retained page(s)"
+                    )
+                else:
+                    victims = [
+                        r
+                        for r in steppable
+                        if r in self._live and r not in sess.suspended
+                    ]
+                    if victims:
+                        self._suspend_victim(victims)
             self.steps += 1
         for _, handle in self._ballast:
             sess.release_pages(handle)
@@ -1541,6 +1786,7 @@ class ServeSupervisor:
             "tokens_out": self.tokens_out,
             "admission_retries": self.admission_retries,
             "evictions": self.evictions,
+            "reclaims": self.reclaims,
             "faults_applied": self.faults_applied,
             "faults_skipped": self.faults_skipped,
             "straggler_events": len(self.straggler.events),

@@ -227,6 +227,7 @@ def test_refcount_sweep_clean_pool():
     s = c.refcount_sweep()
     assert s == {
         "live_pages": 2,
+        "retained_pages": 0,
         "free_pages": 6,
         "aliased_pages": 1,
         "live_sequences": 2,
