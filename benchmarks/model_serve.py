@@ -17,7 +17,12 @@ runtime.serve_loop backends and reports, per scenario:
   exactly (see benchmarks/run.py check_regression);
 * **speculative decode** — a draft-verify row (``--speculate ngram``)
   gated on exact greedy parity with off, accepted_tokens_per_step > 1.0,
-  and page-DMA bytes per *accepted* token at or below the off baseline.
+  and page-DMA bytes per *accepted* token at or below the off baseline;
+* **SLA scheduling** — a multi-tenant bursty-traffic row comparing
+  token-budgeted prefill/decode interleaving against phased admission:
+  p50/p99 TTFT and per-token latency per priority class on the
+  deterministic work-unit clock, gated on exact greedy parity and an
+  interactive-class p99 TTFT at or below phased at equal units/token.
 
 ``run()`` returns a JSON-able dict merged into BENCH_decode.json under
 ``model_serve`` and summarized into BENCH_history.json.
@@ -522,6 +527,162 @@ def _multi_tenant_scenario(cfg, model, params, g) -> dict:
     return res
 
 
+def _sla_traffic(cfg, g, *, seed: int = 7, n_bursts: int = 2) -> list:
+    """Seeded bursty multi-tenant traffic: (arrival, prompt, priority) per
+    request, arrivals on the deterministic work-unit clock.
+
+    Each burst opens with one *batch* long prompt (16-20 prefill chunks —
+    the 32k-prompt regime scaled to the tier's chunk), then five
+    *interactive* shorts and one *standard* mid-length request land inside
+    the window the long's synchronous prefill would occupy.  That overlap
+    is the whole scenario: under phased admission every one of them waits
+    behind the long's full prefill; under token-budgeted interleaving they
+    chunk in beside it.
+    """
+    rng = np.random.default_rng(seed)
+    chunk = g["chunk"]
+    subs, u = [], 0
+    for _ in range(n_bursts):
+        n = int(rng.integers(16 * chunk, 20 * chunk + 1))
+        subs.append(
+            (u, rng.integers(2, cfg.vocab_size, size=n).tolist(), 0)
+        )
+        for _ in range(5):
+            arr = u + int(rng.integers(0, 18))
+            n = int(rng.integers(max(chunk // 4, 2), 3 * chunk // 2))
+            subs.append(
+                (arr, rng.integers(2, cfg.vocab_size, size=n).tolist(), 2)
+            )
+        arr = u + int(rng.integers(0, 18))
+        n = int(rng.integers(3 * chunk // 2 + 1, 7 * chunk // 2))
+        subs.append(
+            (arr, rng.integers(2, cfg.vocab_size, size=n).tolist(), 1)
+        )
+        u += int(rng.integers(30, 40))
+    return subs
+
+
+def _multi_tenant_sla_scenario(cfg, model, params, g, *, gen_len: int = 6) -> dict:
+    """SLA row: token-budgeted prefill/decode interleaving vs phased.
+
+    The same seeded bursty traffic (``_sla_traffic``: priority classes
+    interactive/standard/batch, work-unit arrivals) runs twice per cache
+    dtype — once phased (``prefill_budget=None``: admission prefills the
+    whole prompt synchronously, stalling every live decoder) and once
+    interleaved (``prefill_budget = 3 x chunk``: pending prompts advance by
+    chunk-aligned slices inside ``step()`` while decode proceeds).  Both
+    runs go through :class:`ServeSupervisor` with priority+deadline
+    admission ordering and ``arrival_unit="work_units"`` so the latency
+    clock charges phased for the stall it actually causes.
+
+    Gates (ABSOLUTE_FLOORS in benchmarks/run.py):
+
+    * ``greedy_match_vs_phased{,_int8} == 1.0`` — budgeted slices land on
+      the same chunk boundaries as monolithic prefill, so every token is
+      bit-identical;
+    * ``ttft_interactive_p99_improvement >= 1.0`` — the p99 TTFT proxy for
+      the interactive class (nearest-rank, work-unit clock) at or below
+      phased;
+    * ``units_per_token_ratio >= 1.0`` — equal-or-better tokens/s proxy:
+      (request_steps + prefill_chunks) per output token, identical by
+      construction because interleaving re-slices the same chunks;
+    * ``sweep_clean == 1.0`` — every ``close()`` drains the pool leak-free
+      (pending mid-prefill rows included).
+
+    A final interleaved run attaches a tight deadline to the batch request
+    (abandon/timeout traffic): ``deadline_abandons`` reports how many
+    requests the supervisor dropped at their deadline — informational, the
+    parity runs carry no deadlines so the token streams stay comparable.
+    """
+    from repro.runtime.serve_loop import ServeSupervisor, latency_percentile
+
+    budget = 3 * g["chunk"]
+    traffic = {"bf16": _sla_traffic(cfg, g), "int8": _sla_traffic(cfg, g, n_bursts=1)}
+
+    def _run(subs, prefill_budget, kv_dtype=None, deadlines=None):
+        sess = PagedServingSession(
+            model, params, num_pages=g["num_pages"], page_size=g["page"],
+            block_k=g["block_k"], prefill_chunk=g["chunk"],
+            prefill_budget=prefill_budget, kv_dtype=kv_dtype,
+        )
+        sup = ServeSupervisor(sess, gen_len=gen_len, arrival_unit="work_units")
+        t0 = time.perf_counter()
+        for i, (arr, prompt, pri) in enumerate(subs):
+            sup.submit(prompt, priority=pri, arrival=arr,
+                       deadline=(deadlines or {}).get(i))
+        results = sup.run()
+        jax.block_until_ready(sess.cache.pages)
+        dt = time.perf_counter() - t0
+        stats, recs, work = sup.stats(), sup.latency_records(), sess.work_stats()
+        work["schedule_rebuilds"] = sess.scheduler_stats["rebuilds"]
+        sweep = sess.close()
+        clean = sweep["free_pages"] == g["num_pages"]
+        return results, stats, recs, work, dt, clean, sup
+
+    def _class_ttft(subs, recs):
+        by_class = {0: [], 1: [], 2: []}
+        for (_, _, pri), rec in zip(subs, recs):
+            if rec["first_vt"] is not None:
+                by_class[pri].append(rec["first_vt"] - rec["submit_vt"])
+        return by_class
+
+    res = {"requests": len(traffic["bf16"]), "prefill_budget": budget,
+           "gen_len": gen_len}
+    clean_all = True
+    for dname, dtype in (("bf16", None), ("int8", "int8")):
+        subs = traffic[dname]
+        r_ph, s_ph, rec_ph, w_ph, dt_ph, c_ph, _ = _run(subs, None, dtype)
+        r_il, s_il, rec_il, w_il, dt_il, c_il, _ = _run(subs, budget, dtype)
+        clean_all = clean_all and c_ph and c_il
+        suffix = "" if dname == "bf16" else "_int8"
+        matches = sum(r_ph[i] == r_il[i] for i in r_ph if i in r_il)
+        res[f"greedy_match_vs_phased{suffix}"] = matches / len(subs)
+        if dname != "bf16":
+            continue
+        toks = sum(len(v) for v in r_il.values())
+        ttft_ph, ttft_il = _class_ttft(subs, rec_ph), _class_ttft(subs, rec_il)
+        upt_ph = (w_ph["request_steps"] + w_ph["prefill_chunks"]) / max(toks, 1)
+        upt_il = (w_il["request_steps"] + w_il["prefill_chunks"]) / max(toks, 1)
+        p99_ph = latency_percentile(ttft_ph[2], 99)
+        p99_il = latency_percentile(ttft_il[2], 99)
+        res.update({
+            "tokens_out": toks,
+            "tokens_per_s_paged": toks / max(dt_il, 1e-9),
+            "tokens_per_s_phased": toks / max(dt_ph, 1e-9),
+            "page_dmas_paged": w_il["page_dmas"],
+            "page_dma_bytes_paged": w_il["page_dma_bytes"],
+            "schedule_rebuilds": w_il["schedule_rebuilds"],
+            "ttft_interactive_p50_phased": latency_percentile(ttft_ph[2], 50),
+            "ttft_interactive_p50_interleaved": latency_percentile(ttft_il[2], 50),
+            "ttft_interactive_p99_phased": p99_ph,
+            "ttft_interactive_p99_interleaved": p99_il,
+            "ttft_interactive_p99_improvement": p99_ph / max(p99_il, 1e-9),
+            "ttft_standard_p99_phased": latency_percentile(ttft_ph[1], 99),
+            "ttft_standard_p99_interleaved": latency_percentile(ttft_il[1], 99),
+            "ttft_batch_p99_phased": latency_percentile(ttft_ph[0], 99),
+            "ttft_batch_p99_interleaved": latency_percentile(ttft_il[0], 99),
+            "tpot_units_p99_phased": s_ph["tpot_units_p99"],
+            "tpot_units_p99_interleaved": s_il["tpot_units_p99"],
+            "tpot_p99_improvement": (
+                s_ph["tpot_units_p99"] / max(s_il["tpot_units_p99"], 1e-9)
+            ),
+            "prefill_stall_steps_phased": s_ph["prefill_stall_steps"],
+            "prefill_stall_steps_interleaved": s_il["prefill_stall_steps"],
+            "units_per_token_phased": upt_ph,
+            "units_per_token_interleaved": upt_il,
+            "units_per_token_ratio": upt_ph / max(upt_il, 1e-9),
+        })
+    # Abandon/timeout traffic: the batch long gets a deadline it cannot
+    # meet, the supervisor must drop it at the deadline and still finish
+    # everyone else (informational — parity runs carry no deadlines).
+    subs = traffic["int8"]
+    _, _, _, _, _, c_dl, sup = _run(subs, budget, None, deadlines={0: 3})
+    clean_all = clean_all and c_dl
+    res["deadline_abandons"] = len(sup.abandoned_idx)
+    res["sweep_clean"] = float(clean_all)
+    return res
+
+
 def run(full: bool = False, smoke: bool = False) -> dict:
     tier = "full" if full else ("smoke" if smoke else "default")
     mode = "tpu" if _on_tpu() else "cpu-interpret"
@@ -558,6 +719,11 @@ def run(full: bool = False, smoke: bool = False) -> dict:
     for k, v in sorted(mt.items()):
         val = f"{v:.2f}" if isinstance(v, float) else v
         print(f"model_serve,multi_tenant,{k},{val}")
+    sla = _multi_tenant_sla_scenario(cfg, model, params, g)
+    report["scenarios"]["multi_tenant_sla"] = sla
+    for k, v in sorted(sla.items()):
+        val = f"{v:.2f}" if isinstance(v, float) else v
+        print(f"model_serve,multi_tenant_sla,{k},{val}")
     rag = report["scenarios"]["ragged"]
     print(
         f"model_serve,summary,read_reduction_vs_dense,"
@@ -619,6 +785,21 @@ def run(full: bool = False, smoke: bool = False) -> dict:
         f"{mt['dma_bytes_reduction_vs_off']:.2f},greedy_match,"
         f"{mt['greedy_match_vs_off']:.2f},hit_rate,"
         f"{mt['prefix_hit_rate']:.2f},pass,{int(mt_ok)}"
+    )
+    sla_ok = (
+        sla["greedy_match_vs_phased"] == 1.0
+        and sla["greedy_match_vs_phased_int8"] == 1.0
+        and sla["ttft_interactive_p99_improvement"] >= 1.0
+        and sla["units_per_token_ratio"] >= 1.0
+        and sla["prefill_stall_steps_interleaved"] == 0
+        and sla["sweep_clean"] == 1.0
+    )
+    print(
+        f"model_serve,acceptance_multi_tenant_sla,ttft_p99_improvement,"
+        f"{sla['ttft_interactive_p99_improvement']:.2f},greedy_match,"
+        f"{sla['greedy_match_vs_phased']:.2f},units_per_token_ratio,"
+        f"{sla['units_per_token_ratio']:.2f},stall_steps,"
+        f"{sla['prefill_stall_steps_interleaved']},pass,{int(sla_ok)}"
     )
     return report
 

@@ -134,6 +134,17 @@ def _summarize(report: dict) -> dict:
                 "prefix_tokens_reused_per_admission",
                 "trie_evicted_pages",
                 "sweep_clean",
+                "greedy_match_vs_phased",
+                "greedy_match_vs_phased_int8",
+                "ttft_interactive_p99_phased",
+                "ttft_interactive_p99_interleaved",
+                "ttft_interactive_p99_improvement",
+                "tpot_units_p99_phased",
+                "tpot_units_p99_interleaved",
+                "tpot_p99_improvement",
+                "prefill_stall_steps_interleaved",
+                "units_per_token_ratio",
+                "deadline_abandons",
             ))
     return out
 
@@ -272,6 +283,16 @@ def check_regression(report: dict, baseline_path: str, tol: float) -> list:
         # regression (missed matches, broken retention) shrinks both.
         ("model_serve", "dma_bytes_reduction_vs_off", False, not on_tpu),
         ("model_serve", "prefix_hit_rate", False, not on_tpu),
+        # [MODEL-SERVE] multi_tenant_sla row: the interactive-class p99
+        # TTFT improvement, per-token latency improvement, and interleaved
+        # stall count are deterministic on the work-unit clock — a
+        # scheduling regression (budget starvation, lost interleaving)
+        # shrinks the improvements or revives stall steps (0 baseline:
+        # any nonzero count fails outright).
+        ("model_serve", "ttft_interactive_p99_improvement", False, not on_tpu),
+        ("model_serve", "tpot_p99_improvement", False, not on_tpu),
+        ("model_serve", "units_per_token_ratio", False, not on_tpu),
+        ("model_serve", "prefill_stall_steps_interleaved", True, not on_tpu),
     ]
     for section_key, metric, lower_better, gated in checks:
         for name, res in report.get(section_key, {}).items():
@@ -328,6 +349,18 @@ ABSOLUTE_FLOORS = [
     ("model_serve", "multi_tenant", "dma_bytes_reduction_vs_off_int8", 2.0),
     ("model_serve", "multi_tenant", "sweep_clean", 1.0),
     ("model_serve", "multi_tenant", "sweep_clean_int8", 1.0),
+    # Token-budgeted interleaving must be invisible in the tokens (budgeted
+    # chunk slices land on the same chunk boundaries as monolithic prefill,
+    # both cache dtypes), beat phased admission on the interactive-class
+    # p99 TTFT proxy at equal-or-better units/token (>= 1.0 means at or
+    # below phased on both), and tear down leak-free with pending
+    # mid-prefill rows in flight.
+    ("model_serve", "multi_tenant_sla", "greedy_match_vs_phased", 1.0),
+    ("model_serve", "multi_tenant_sla", "greedy_match_vs_phased_int8", 1.0),
+    ("model_serve", "multi_tenant_sla", "ttft_interactive_p99_improvement", 1.0),
+    ("model_serve", "multi_tenant_sla", "tpot_p99_improvement", 1.0),
+    ("model_serve", "multi_tenant_sla", "units_per_token_ratio", 1.0),
+    ("model_serve", "multi_tenant_sla", "sweep_clean", 1.0),
 ]
 
 

@@ -825,3 +825,69 @@ def shard_work_balance(per_shard_items) -> dict:
         "mean": mean,
         "imbalance": (peak / mean) if mean > 0 else 1.0,
     }
+
+
+def plan_prefill_slices(remaining, budget: int, chunk: int) -> list:
+    """Split a per-step prefill token budget over pending prompts.
+
+    ``remaining[i]`` is pending prompt i's unprefilled token count, in
+    arrival (FIFO) order.  Returns ``slices`` with ``slices[i]`` tokens to
+    prefill this step.  Every slice is a multiple of ``chunk`` except a
+    prompt's final tail (partial chunks only ever run once, at the end, so
+    repeated budgeted slices land on exactly the chunk boundaries one
+    monolithic prefill would — bit-identical cache rows).
+
+    Policy (deterministic):
+
+    * anti-starvation — the oldest pending prompt claims up to one chunk
+      first, so a stream of short arrivals can never starve a long prompt;
+    * the rest of the budget goes shortest-remaining-first (ties break
+      toward older arrivals), which is what collapses short prompts' TTFT
+      under a long prompt's chunk-in instead of queueing behind it.
+    """
+    if budget < 0:
+        raise ValueError(f"budget must be >= 0, got {budget}")
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    rem = [int(r) for r in remaining]
+    slices = [0] * len(rem)
+    left = int(budget)
+
+    def grant(i: int, amount: int) -> int:
+        r = rem[i] - slices[i]
+        take = r if r <= amount else (amount // chunk) * chunk
+        slices[i] += take
+        return take
+
+    if not rem or left <= 0:
+        return slices
+    left -= grant(0, min(chunk, left))
+    for i in sorted(range(len(rem)), key=lambda j: (rem[j] - slices[j], j)):
+        if left <= 0:
+            break
+        if rem[i] - slices[i] > 0:
+            left -= grant(i, left)
+    return slices
+
+
+def admission_order(items) -> list:
+    """SLA-aware admission ordering for queued submissions.
+
+    ``items`` is an iterable of ``(idx, priority, slack)``: the submission
+    index, its priority class (higher = more urgent), and its deadline
+    slack in steps (None = no deadline).  Returns the submission indices
+    ordered highest-priority first, then least slack (earliest effective
+    deadline), then submission index — the deterministic order the
+    supervisor tries admissions in, replacing pure FIFO head-of-line.
+    Results stay keyed by submission index, so reordering admissions never
+    reorders results.
+    """
+    def key(item):
+        idx, priority, slack = item
+        return (
+            -int(priority),
+            float("inf") if slack is None else float(slack),
+            int(idx),
+        )
+
+    return [int(item[0]) for item in sorted(items, key=key)]

@@ -18,6 +18,8 @@ Usage:
         --shared-prefix   # forked system-prompt demo
     PYTHONPATH=src python -m repro.launch.serve --cache paged --smoke \
         --speculate ngram --draft-k 4   # draft-verify speculative decode
+    PYTHONPATH=src python -m repro.launch.serve --cache paged --smoke \
+        --prefill-budget 64 --priority-classes 2,0,1   # SLA interleaving
 
 The paged backend needs an MLA geometry; with no explicit ``--arch`` it
 serves the paper's (``deepseek-v2-mla``), while dense defaults to
@@ -104,6 +106,7 @@ def _build_session(args, cfg, model, params):
             draft_k=args.draft_k,
             prefix_cache=args.prefix_cache,
             retain_pages=args.retain_pages,
+            prefill_budget=args.prefill_budget,
         )
     if args.cache == "paged":
         return PagedServingSession(
@@ -120,6 +123,7 @@ def _build_session(args, cfg, model, params):
             draft_k=args.draft_k,
             prefix_cache=args.prefix_cache,
             retain_pages=args.retain_pages,
+            prefill_budget=args.prefill_budget,
         )
     if args.kv_dtype is not None:
         raise SystemExit("--kv-dtype needs --cache paged (dense caches "
@@ -134,6 +138,7 @@ def _serve_stream(sess, pending, gen_len, requests):
     t0 = time.time()
     tokens_out = 0
     results: dict[int, list[int]] = {}
+    idle_steps = 0
     while done < requests:
         # admit as many queued prompts as there is room (slots or pages)
         while pending:
@@ -141,7 +146,10 @@ def _serve_stream(sess, pending, gen_len, requests):
             if rid is None:
                 break
             pending.pop(0)
-            live[rid] = gen_len
+            # Phased admission emits the first token inside add_request;
+            # under a prefill budget it arrives later as a step delta, so
+            # the request owes one extra emission to reach the same total.
+            live[rid] = gen_len + (0 if sess.outputs[rid] else 1)
             print(f"admitted request {rid} ({len(pending)} queued)")
         if not live and pending:
             # Nothing running and the head prompt still won't admit: with
@@ -171,9 +179,11 @@ def _serve_stream(sess, pending, gen_len, requests):
                 f"{len(out)} tokens: {out[:8]}..."
             )
             continue
+        step_emitted = 0
         for rid in list(live):
             emitted = len(sess.outputs[rid]) - before[rid]
             tokens_out += emitted
+            step_emitted += emitted
             live[rid] -= emitted
             if live[rid] <= 0:
                 out = sess.finish(rid)
@@ -181,6 +191,17 @@ def _serve_stream(sess, pending, gen_len, requests):
                 done += 1
                 print(f"request {rid} done: {len(out)} tokens: {out[:8]}...")
                 del live[rid]
+        # Zero-emission steps are normal while budgeted prefill chunks a
+        # long prompt in, but a loop that never emits again is a stall —
+        # fail loudly instead of spinning (any backlog clears within
+        # ceil(backlog / chunk) steps, bounded far below this).
+        idle_steps = 0 if step_emitted else idle_steps + 1
+        if idle_steps > 64 + sum(len(p) for p in pending):
+            raise SystemExit(
+                f"serve stream stalled: {idle_steps} consecutive steps "
+                f"with no tokens emitted ({len(live)} live, "
+                f"{len(pending)} queued)"
+            )
     dt = time.time() - t0
     return results, tokens_out, dt
 
@@ -215,8 +236,9 @@ def _serve_supervised(sess, pending, args):
     sup = ServeSupervisor(
         sess, gen_len=args.gen_len, deadline=args.deadline, plan=plan
     )
-    for prompt in pending:
-        sup.submit(prompt)
+    classes = args.priority_classes or [0]
+    for i, prompt in enumerate(pending):
+        sup.submit(prompt, priority=classes[i % len(classes)])
     t0 = time.time()
     results = sup.run()
     dt = time.time() - t0
@@ -240,6 +262,13 @@ def _serve_supervised(sess, pending, args):
         f"{stats['admission_retries']} admission retries, "
         f"{stats['straggler_events']} straggler events, "
         f"{stats['abandoned']} abandoned"
+    )
+    print(
+        f"latency (work units): TTFT p50/p99 {stats['ttft_units_p50']:.0f}/"
+        f"{stats['ttft_units_p99']:.0f}, per-token p50/p99 "
+        f"{stats['tpot_units_p50']:.0f}/{stats['tpot_units_p99']:.0f} over "
+        f"{stats['work_units']} units ({stats['prefill_chunks']} prefill "
+        f"chunks, {stats['prefill_stall_steps']} decode-stall chunks)"
     )
     if hasattr(sess, "shard_health"):
         print(f"shard health: {sess.shard_health}")
@@ -366,15 +395,48 @@ def main(argv=None):
                     help="paged only: per-request decode-step deadline; "
                     "over-deadline requests are abandoned with their "
                     "partial output (implies the supervised loop)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    metavar="TOKENS",
+                    help="paged only: per-step prefill token budget — "
+                    "admission enqueues the prompt and step() interleaves "
+                    "chunk-aligned prefill slices with decode instead of "
+                    "stalling every live request for the whole prompt; "
+                    "must be >= --prefill-chunk; greedy outputs are "
+                    "identical to phased admission")
+    ap.add_argument("--priority-classes", default=None, metavar="P0,P1,...",
+                    help="paged only: comma-separated integer priority "
+                    "classes assigned round-robin to submitted requests "
+                    "(higher admits first; ties by deadline slack then "
+                    "submission order); implies the supervised loop")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    if (args.chaos is not None or args.deadline is not None) and (
-        args.cache != "paged"
-    ):
-        raise SystemExit("--chaos/--deadline need --cache paged (recoverable "
-                         "eviction/replay rides the paged pool's refcounted "
-                         "free + chunked re-prefill)")
+    if args.priority_classes is not None:
+        try:
+            args.priority_classes = [
+                int(x) for x in args.priority_classes.split(",") if x.strip()
+            ]
+        except ValueError:
+            raise SystemExit(
+                f"--priority-classes must be comma-separated integers, "
+                f"got {args.priority_classes!r}"
+            )
+        if not args.priority_classes:
+            raise SystemExit("--priority-classes must name at least one class")
+    supervised = (
+        args.chaos is not None
+        or args.deadline is not None
+        or args.priority_classes is not None
+    )
+    if supervised and args.cache != "paged":
+        raise SystemExit("--chaos/--deadline/--priority-classes need "
+                         "--cache paged (recoverable eviction/replay and "
+                         "priority admission ride the paged pool's "
+                         "refcounted free + chunked re-prefill)")
+    if args.prefill_budget is not None and args.cache != "paged":
+        raise SystemExit("--prefill-budget needs --cache paged (budgeted "
+                         "prefill slices ride the chunked paged prefill "
+                         "path; dense admission is monolithic)")
     if args.speculate != "off" and args.cache != "paged":
         raise SystemExit("--speculate needs --cache paged (rollback rides "
                          "the paged pool's refcounted truncate; dense slots "
@@ -435,7 +497,7 @@ def main(argv=None):
         + rng.integers(2, cfg.vocab_size, size=int(rng.integers(4, 24))).tolist()
         for _ in range(args.requests)
     ]
-    if args.chaos is not None or args.deadline is not None:
+    if supervised:
         _serve_supervised(sess, pending, args)
         return
     _, tokens_out, dt = _serve_stream(sess, pending, args.gen_len, args.requests)

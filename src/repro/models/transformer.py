@@ -464,7 +464,8 @@ def lm_prefill_paged(
     layer_params: list | None = None,
     compute_dtype=None,
     head_shards: int = 1,
-) -> jax.Array:
+    need_logits: bool = True,
+) -> jax.Array | None:
     """Chunked prefill-into-pages; returns last-token logits ``(1, vocab)``.
 
     The prompt is processed in fixed-size chunks of ``chunk`` tokens (the
@@ -474,6 +475,14 @@ def lm_prefill_paged(
     with per-row causal positions — which is also what makes a forked
     request work: ``start_pos > 0`` (an ``admit_with_prefix`` suffix) scores
     the new rows against the aliased prefix pages it never re-computes.
+
+    Only the final chunk unembeds (the earlier chunks' logits were never
+    returned anyway).  ``need_logits=False`` skips even that and returns
+    None — the budgeted-interleaving path uses it for intermediate slices
+    of a prompt whose first-token logits come from a *later* call: cache
+    rows are written identically either way, so a prompt prefilled in
+    several ``start_pos``-advancing chunk-aligned calls is bit-identical
+    to one monolithic call.
     """
     from repro.kernels import decode_schedule as _sched
     from repro.kernels import ops
@@ -515,8 +524,11 @@ def lm_prefill_paged(
                 variant=variant, head_shards=head_shards,
             )
             x = _paged_layer_post(p_l, x, attn, cfg=cfg)
-        logits = _paged_logits_at(params, x, jnp.int32(valid - 1), cfg=cfg)
-    return logits[:, 0]
+        if need_logits and s0 + chunk >= s_total:
+            logits = _paged_logits_at(
+                params, x, jnp.int32(valid - 1), cfg=cfg
+            )
+    return logits[:, 0] if need_logits else None
 
 
 def lm_decode_step_paged(

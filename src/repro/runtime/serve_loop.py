@@ -312,6 +312,16 @@ class PagedServingSession:
       Greedy outputs are token-for-token identical to ``speculate="off"``
       — speculation changes the *cost* per emitted token, never the
       tokens.
+    * ``prefill_budget=N`` turns admission into **token-budgeted
+      chunked-prefill/decode interleaving**: :meth:`add_request` only
+      *enqueues* the prompt (after the same pool/trie admission checks),
+      and every :meth:`step` first decodes the live batch, then spends up
+      to ``N`` prompt tokens advancing pending prompts by
+      ``prefill_chunk``-aligned slices through the same
+      ``lm_prefill_paged`` path — so a long prompt arrival never stalls
+      decode.  Slice boundaries land exactly on the chunk boundaries a
+      monolithic prefill would use, so cache rows and greedy outputs stay
+      bit-identical to phase-separated (``prefill_budget=None``) serving.
     """
 
     def __init__(
@@ -337,6 +347,7 @@ class PagedServingSession:
         draft_proposer=None,
         prefix_cache: str = "off",
         retain_pages: int | None = None,
+        prefill_budget: int | None = None,
     ):
         from repro.kernels import ops
         from repro.kernels.decode_schedule import DecodeScheduler
@@ -387,6 +398,20 @@ class PagedServingSession:
         self.prefix_sharing = prefix_sharing
         self.prefill_chunk = prefill_chunk
         self.max_batch = max_batch
+        if prefill_budget is not None and prefill_budget < prefill_chunk:
+            raise ValueError(
+                f"prefill_budget={prefill_budget} is below prefill_chunk="
+                f"{prefill_chunk}: a budgeted step spends whole chunks "
+                "(padded model invocations), so a smaller budget could "
+                "never advance any pending prompt"
+            )
+        self.prefill_budget = (
+            None if prefill_budget is None else int(prefill_budget)
+        )
+        # Pending-prompt queue (budgeted interleaving): admitted-but-
+        # unprefilled prompts, FIFO by arrival.  ``done`` counts the rows
+        # already prefilled (including trie-adopted blocks).
+        self._pending: list[dict] = []
         if prefix_cache not in ("off", "trie"):
             raise ValueError(
                 f"prefix_cache={prefix_cache!r} is not a cache policy; "
@@ -470,6 +495,20 @@ class PagedServingSession:
         self.accepted_tokens = 0
         self.page_dmas = 0
         self.rows_attended = 0
+        # Virtual work clock + per-request latency accounting.  One work
+        # unit = one model invocation: a fused decode launch or one padded
+        # prefill chunk — a deterministic step-count proxy for latency
+        # (interpret-mode wall time is runner noise).  ``prefill_stall_
+        # steps`` counts chunks prefilled *synchronously* while decoders
+        # were live (the phase-separated head-of-line stall; identically 0
+        # under budgeted interleaving).
+        self.work_units = 0
+        self.prefill_chunks = 0
+        self.prefill_stall_steps = 0
+        self.first_tokens = 0
+        self.ttft_units_total = 0
+        self.max_inter_token_units = 0
+        self._lat: dict[int, dict] = {}
         # Recoverable eviction (suspend/resume by replay) + chaos state.
         # ``_family`` maps a forked child to (parent rid, shared rows) so
         # suspend records the alias point and resume can re-alias it.
@@ -559,13 +598,66 @@ class PagedServingSession:
             "suspended": len(self.suspended),
             "replay_prefill_tokens": self.replay_prefill_tokens,
             "replay_mismatches": self.replay_mismatches,
+            # Interleaving / latency proxies (virtual work clock).
+            "work_units": self.work_units,
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_stall_steps": self.prefill_stall_steps,
+            "prefill_pending": len(self._pending),
+            "prefill_backlog_tokens": sum(
+                len(p["prompt"]) - p["done"] for p in self._pending
+            ),
+            "first_tokens": self.first_tokens,
+            "ttft_units_total": self.ttft_units_total,
+            "max_inter_token_units": self.max_inter_token_units,
         }
+
+    @property
+    def prefill_pending(self) -> int:
+        """Admitted-but-unprefilled prompts still in the pending queue."""
+        return len(self._pending)
+
+    def resident_rids(self) -> list[int]:
+        """Every rid holding pool pages: live decoders + pending prompts."""
+        return list(self.active) + [p["rid"] for p in self._pending]
+
+    # -- latency / work accounting -------------------------------------- #
+    def _count_prefill(self, n_tokens: int, interleaved: bool = False):
+        chunks = -(-n_tokens // self.prefill_chunk)
+        self.prefill_chunks += chunks
+        self.work_units += chunks
+        if not interleaved and self.active:
+            # Synchronous prefill with live decoders: every chunk is a
+            # virtual step those requests spent stalled.
+            self.prefill_stall_steps += chunks
+
+    def _note_admit(self, rid: int) -> None:
+        vt = self.work_units
+        self._lat.setdefault(rid, {"admit": vt, "first": None, "last": vt})
+
+    def _note_emit(self, rid: int) -> None:
+        vt = self.work_units
+        rec = self._lat.setdefault(
+            rid, {"admit": vt, "first": None, "last": vt}
+        )
+        if rec["first"] is None:
+            rec["first"] = vt
+            self.first_tokens += 1
+            self.ttft_units_total += vt - rec["admit"]
+        else:
+            gap = vt - rec["last"]
+            if gap > self.max_inter_token_units:
+                self.max_inter_token_units = gap
+        rec["last"] = vt
 
     # -- admission / branching ----------------------------------------- #
     def _admit(self, rid: int, first_token: int) -> int:
         self.active.append(rid)
-        self.outputs[rid] = [first_token]
+        # setdefault + append: under budgeted interleaving the output list
+        # was created at enqueue time and sharded sessions already hold a
+        # view of that very object — replacing it would orphan their alias.
+        self.outputs.setdefault(rid, []).append(first_token)
         self.last_token[rid] = first_token
+        self._note_emit(rid)
         return rid
 
     def add_request(self, prompt_tokens) -> int | None:
@@ -624,6 +716,19 @@ class PagedServingSession:
         if need - len(tpages) > self.cache.num_free_pages:
             self.cache.free(rid)  # adoption refs drop; pins are untouched
             return None
+        self._prompt[rid] = prompt
+        self._note_admit(rid)
+        if self.prefill_budget is not None:
+            # Budgeted interleaving: admission only *enqueues* — the
+            # matched prefix pages are already adopted, and step() advances
+            # the unprefilled tail in chunk-aligned budgeted slices.  The
+            # output list exists from here on so sharded sessions can alias
+            # it before the first token lands.
+            self.outputs[rid] = []
+            self._pending.append(
+                {"rid": rid, "prompt": prompt, "done": matched}
+            )
+            return rid
         self._prefill_shapes.add((1, self.prefill_chunk))
         logits = _tf.lm_prefill_paged(
             self.params,
@@ -640,7 +745,7 @@ class PagedServingSession:
             compute_dtype=self.compute_dtype,
             head_shards=self.head_shards,
         )
-        self._prompt[rid] = prompt
+        self._count_prefill(len(prompt) - matched)
         if self.trie is not None:
             # Publish the *live* prefix immediately: leaves map to live or
             # retained prefixes, so concurrent same-template admissions
@@ -689,6 +794,8 @@ class PagedServingSession:
         self.last_token[child] = self.last_token[rid]
         self._prompt[child] = list(self._prompt[rid])
         self._family[child] = (rid, self.cache.seq_len(child))
+        vt = self.work_units
+        self._lat[child] = {"admit": vt, "first": vt, "last": vt}
         return child
 
     def admit_with_prefix(
@@ -733,6 +840,7 @@ class PagedServingSession:
         ctx = (self._prompt[parent_rid] + self.outputs[parent_rid])[:-1]
         self._prompt[child] = ctx[:start] + suffix
         self._family[child] = (parent_rid, start)
+        self._note_admit(child)
         self._prefill_shapes.add((1, self.prefill_chunk))
         logits = _tf.lm_prefill_paged(
             self.params,
@@ -749,6 +857,7 @@ class PagedServingSession:
             compute_dtype=self.compute_dtype,
             head_shards=self.head_shards,
         )
+        self._count_prefill(len(suffix))
         return self._admit(child, int(jnp.argmax(logits[0])))
 
     # -- decode --------------------------------------------------------- #
@@ -767,6 +876,13 @@ class PagedServingSession:
         stream is token-for-token identical to non-speculative decode.
         Rejected tail rows (already appended to the cache so the kernel
         could attend them) roll back via ``cache.truncate``.
+
+        With ``prefill_budget`` set, every step is a unified work unit:
+        after the decode launch (live requests always emit — no decode
+        stall), up to ``prefill_budget`` tokens of pending prompts advance
+        through chunk-aligned ``lm_prefill_paged`` slices; a prompt whose
+        final slice lands joins the live batch with its first token and
+        decodes from the next step.
         """
         from repro.kernels.decode_schedule import (
             PrefixSchedule,
@@ -777,6 +893,8 @@ class PagedServingSession:
 
         rids = list(self.active)
         if not rids:
+            if self.prefill_budget is not None and self._pending:
+                self._advance_prefill()
             return
         s = self.draft_k if self.speculate != "off" else 1
         if s > 1:
@@ -826,6 +944,7 @@ class PagedServingSession:
             head_shards=self.head_shards,
         )
         greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # (B, s)
+        self.work_units += 1  # one fused decode launch
         for i, r in enumerate(rids):
             # Accept the longest prefix where draft d_{m+1} equals the
             # model's greedy pick after row m; emit m+1 tokens (the first
@@ -837,6 +956,7 @@ class PagedServingSession:
             emitted = [int(t) for t in greedy[i, : m + 1]]
             self.outputs[r].extend(emitted)
             self.last_token[r] = emitted[-1]
+            self._note_emit(r)
             if m + 1 < s:
                 # Roll back rejected draft rows: keep the pending token's
                 # row plus the m accepted draft rows.
@@ -864,6 +984,65 @@ class PagedServingSession:
         n_layers = self.cfg.n_layers
         self.page_dmas += int(acct["page_dmas"]) * n_layers
         self.rows_attended += int(kv.sum()) * s * n_layers
+        if self.prefill_budget is not None and self._pending:
+            self._advance_prefill()
+
+    def _advance_prefill(self) -> None:
+        """Spend this step's prefill token budget on the pending queue.
+
+        Slice sizes come from :func:`~repro.kernels.decode_schedule
+        .plan_prefill_slices` (oldest-first anti-starvation chunk, then
+        shortest-remaining-first); every slice runs through the same
+        ``lm_prefill_paged`` path as synchronous admission with
+        ``start_pos`` at the rows already written, so the chunk boundaries
+        — and therefore the cache rows and the eventual greedy stream —
+        are bit-identical to a phase-separated prefill.  Intermediate
+        slices skip the unembed (``need_logits=False``); only a prompt's
+        final slice computes logits, emits the first token, and (trie on)
+        publishes the prompt blocks for prefix reuse.  A slice whose pages
+        are not available right now is skipped without burning budget —
+        decode keeps running and the slice retries next step.
+        """
+        from repro.kernels.decode_schedule import plan_prefill_slices
+        from repro.models import transformer as _tf
+
+        pending = list(self._pending)
+        slices = plan_prefill_slices(
+            [len(p["prompt"]) - p["done"] for p in pending],
+            self.prefill_budget,
+            self.prefill_chunk,
+        )
+        for ent, take in zip(pending, slices):
+            if take <= 0:
+                continue
+            rid, prompt = ent["rid"], ent["prompt"]
+            if not self.cache.has_room(rid, take):
+                continue
+            final = ent["done"] + take == len(prompt)
+            self._prefill_shapes.add((1, self.prefill_chunk))
+            logits = _tf.lm_prefill_paged(
+                self.params,
+                prompt[ent["done"] : ent["done"] + take],
+                cfg=self.cfg,
+                cache=self.cache,
+                rid=rid,
+                start_pos=ent["done"],
+                chunk=self.prefill_chunk,
+                table_width=self.table_width,
+                block_k=self.block_k,
+                interpret=self.interpret,
+                layer_params=self._layers,
+                compute_dtype=self.compute_dtype,
+                head_shards=self.head_shards,
+                need_logits=final,
+            )
+            self._count_prefill(take, interleaved=True)
+            ent["done"] += take
+            if final:
+                self._pending.remove(ent)
+                if self.trie is not None:
+                    self._retain_prompt(rid)
+                self._admit(rid, int(jnp.argmax(logits[0])))
 
     def finish(self, rid: int) -> list[int]:
         """Retire ``rid``: pages return to the pool (aliased prefix pages
@@ -876,7 +1055,19 @@ class PagedServingSession:
         them instead of re-prefilling.
         """
         if rid not in self.active:
-            raise KeyError(f"request {rid} is not live")
+            pend = next(
+                (p for p in self._pending if p["rid"] == rid), None
+            )
+            if pend is None:
+                raise KeyError(f"request {rid} is not live")
+            # Mid-prefill retire (deadline/abandon): partial rows free,
+            # nothing was emitted — the output list is empty.
+            self._pending.remove(pend)
+            self.cache.free(rid)
+            self.last_token.pop(rid, None)
+            self._prompt.pop(rid, None)
+            self._family.pop(rid, None)
+            return self.outputs.pop(rid)
         self.active.remove(rid)
         self.cache.free(rid)
         self.last_token.pop(rid, None)
@@ -893,7 +1084,27 @@ class PagedServingSession:
         steps the cache rows are always prompt + outputs[:-1] (speculative
         rollback restores that invariant inside step()), so the pending
         token ``outputs[-1]`` plus the token history *is* the full decode
-        state.  :meth:`resume` rebuilds the rows by replay."""
+        state.  :meth:`resume` rebuilds the rows by replay.
+
+        A *pending* (mid-prefill) request suspends too: its partial rows
+        free now and the record carries an empty output list — replay
+        restarts the prefill from scratch (re-enqueued under budgeted
+        interleaving, synchronous otherwise)."""
+        pend = next((p for p in self._pending if p["rid"] == rid), None)
+        if pend is not None:
+            rec = SuspendedRequest(
+                prompt=list(self._prompt[rid]),
+                outputs=self.outputs[rid],  # empty, but the live object
+            )
+            self._pending.remove(pend)
+            self.cache.free(rid)
+            self.outputs.pop(rid)
+            self.last_token.pop(rid, None)
+            self._prompt.pop(rid, None)
+            self._family.pop(rid, None)
+            self.suspended[rid] = rec
+            self.suspends += 1
+            return rec
         if rid not in self.active:
             raise KeyError(f"request {rid} is not live")
         parent, prefix_rows = self._family.get(rid, (None, 0))
@@ -964,6 +1175,47 @@ class PagedServingSession:
     ) -> bool:
         from repro.models import transformer as _tf
 
+        if not rec.outputs:
+            # Suspended mid-prefill: nothing was ever emitted, so there is
+            # no pending token to replay toward — restart the prompt from
+            # scratch (budgeted sessions re-enqueue it; synchronous ones
+            # prefill it here and now).
+            prompt = list(rec.prompt)
+            if not self.cache.has_room(None, len(prompt)):
+                return False
+            self.cache.alloc(rid)
+            self._prompt[rid] = prompt
+            self.outputs[rid] = rec.outputs
+            self._note_admit(rid)
+            if self.prefill_budget is not None:
+                self._pending.append(
+                    {"rid": rid, "prompt": prompt, "done": 0}
+                )
+                self.resumes += 1
+                return True
+            self._prefill_shapes.add((1, self.prefill_chunk))
+            logits = _tf.lm_prefill_paged(
+                self.params,
+                prompt,
+                cfg=self.cfg,
+                cache=self.cache,
+                rid=rid,
+                start_pos=0,
+                chunk=self.prefill_chunk,
+                table_width=self.table_width,
+                block_k=self.block_k,
+                interpret=self.interpret,
+                layer_params=self._layers,
+                compute_dtype=self.compute_dtype,
+                head_shards=self.head_shards,
+            )
+            self._count_prefill(len(prompt))
+            self.replay_prefill_tokens += len(prompt)
+            if self.trie is not None:
+                self._retain_prompt(rid)
+            self._admit(rid, int(jnp.argmax(logits[0])))
+            self.resumes += 1
+            return True
         tokens = rec.tokens
         use_parent = parent is not None and parent in self.active
         prefix = (
@@ -1006,6 +1258,7 @@ class PagedServingSession:
             if int(jnp.argmax(logits[0])) != int(rec.outputs[-1]):
                 self.replay_mismatches += 1
             self.replay_prefill_tokens += len(suffix)
+            self._count_prefill(len(suffix))
         self.active.append(rid)
         self._prompt[rid] = list(rec.prompt)
         self.outputs[rid] = rec.outputs
@@ -1056,6 +1309,8 @@ class PagedServingSession:
         then :meth:`~repro.runtime.kv_cache.PagedKVCache.refcount_sweep`
         — a page leak fails loudly here in every run, not only under
         chaos.  Returns the sweep report."""
+        for pend in list(self._pending):
+            self.finish(pend["rid"])
         for rid in list(self.active):
             self.finish(rid)
         for handle in list(self._ballast):
@@ -1129,6 +1384,7 @@ class ShardedPagedServingSession:
         draft_proposer=None,
         prefix_cache: str = "off",
         retain_pages: int | None = None,
+        prefill_budget: int | None = None,
     ):
         if mesh is not None and shards is not None:
             raise ValueError("pass mesh= or shards=, not both")
@@ -1179,6 +1435,9 @@ class ShardedPagedServingSession:
                 retain_pages=(
                     None if retain_pages is None else retain_pages // n_data
                 ),
+                # The budget is per shard per step: each shard interleaves
+                # its own pending prompts with its own decode batch.
+                prefill_budget=prefill_budget,
             )
             for dev in devices
         ]
@@ -1214,6 +1473,7 @@ class ShardedPagedServingSession:
             retain_pages=(
                 None if retain_pages is None else retain_pages // n_data
             ),
+            prefill_budget=prefill_budget,
         )
         # Suspended records live at this level: cross-shard resume must not
         # depend on a (possibly dead) origin shard's bookkeeping.
@@ -1223,8 +1483,11 @@ class ShardedPagedServingSession:
 
     # -- routing -------------------------------------------------------- #
     def _live_blocks(self, shard: PagedServingSession) -> int:
+        # Pending (mid-prefill) rids count the blocks they already hold:
+        # their rows are real queue work the moment they go live.
         return sum(
-            -(-shard.cache.seq_len(r) // self.block_k) for r in shard.active
+            -(-shard.cache.seq_len(r) // self.block_k)
+            for r in shard.resident_rids()
         )
 
     def shard_of(self, rid: int) -> int:
@@ -1332,10 +1595,12 @@ class ShardedPagedServingSession:
         ``build_schedule`` from per-shard ``kv_lens`` — so the queue math
         per request is identical to a single-host session holding the same
         requests (schedules are per-request up to dest slots), which is
-        what the greedy-parity acceptance tests pin down.
+        what the greedy-parity acceptance tests pin down.  Shards with
+        only pending prompts still step: their budgeted prefill slices
+        advance even before anything decodes there.
         """
         for shard in self.shards:
-            if shard.active:
+            if shard.active or shard.prefill_pending:
                 shard.step()
 
     def finish(self, rid: int) -> list[int]:
@@ -1493,6 +1758,16 @@ class ShardedPagedServingSession:
         keeps this at 1: every shard traces the same (1, chunk) shape)."""
         return len(set().union(*(s._prefill_shapes for s in self.shards)))
 
+    @property
+    def work_units(self) -> int:
+        """Summed virtual work clock (decode launches + prefill chunks)."""
+        return sum(s.work_units for s in self.shards)
+
+    @property
+    def prefill_pending(self) -> int:
+        """Pending (admitted-but-unprefilled) prompts across shards."""
+        return sum(s.prefill_pending for s in self.shards)
+
     def work_stats(self) -> dict:
         """Aggregate work proxies + per-shard balance.
 
@@ -1527,8 +1802,19 @@ class ShardedPagedServingSession:
                 "resumes",
                 "replay_prefill_tokens",
                 "replay_mismatches",
+                "work_units",
+                "prefill_chunks",
+                "prefill_stall_steps",
+                "prefill_pending",
+                "prefill_backlog_tokens",
+                "first_tokens",
+                "ttft_units_total",
             )
         }
+        # Worst-case inter-token gap is a max, not a sum.
+        agg["max_inter_token_units"] = max(
+            st["max_inter_token_units"] for st in per_shard
+        )
         # Requests suspended at this level (awaiting re-route) are held by
         # no shard; shard-level "suspended" counts are always 0 here
         # because suspend() moves the records up immediately.
@@ -1580,6 +1866,22 @@ class ShardedPagedServingSession:
         }
 
 
+def latency_percentile(samples, q: float) -> float:
+    """Nearest-rank percentile (inclusive) of a latency sample list.
+
+    Deterministic and interpolation-free: p99 of 10 samples is the 10th
+    largest, never a blend — the right definition for the small, exact
+    step-count samples the serve benchmarks gate on.  Empty input → 0.0.
+    """
+    if not 0 <= q <= 100:
+        raise ValueError(f"percentile must be in [0, 100], got {q}")
+    xs = sorted(float(x) for x in samples)
+    if not xs:
+        return 0.0
+    rank = max(1, int(np.ceil(q / 100.0 * len(xs))))
+    return xs[rank - 1]
+
+
 class ServeSupervisor:
     """Supervised continuous-batching serve loop with deterministic chaos.
 
@@ -1595,12 +1897,20 @@ class ServeSupervisor:
     * retries suspended requests (recoverable eviction/replay, including
       re-routes off dead shards), with exponential backoff for requests it
       itself evicted under pool pressure so they cannot livelock the pool;
-    * admits queued prompts FIFO with exponential backoff after a
-      rejection (head-of-line on purpose: FIFO keeps the stream order
-      deterministic);
-    * enforces optional per-request ``deadline``\\ s (decode steps since
-      admission), abandoning over-deadline requests with their partial
-      output intact;
+    * admits queued prompts in :func:`~repro.kernels.decode_schedule
+      .admission_order` — priority class first, then deadline slack, then
+      submission index — with exponential backoff after a rejection and
+      **skip-ahead**: a rejected (or backing-off) prompt no longer blocks
+      later queued prompts that fit right now.  Results stay keyed by
+      submission index, so admission reordering never reorders results,
+      and the order is deterministic given the submissions;
+    * enforces deadlines (decode steps since admission) — the global
+      ``deadline`` or a per-request ``submit(deadline=...)`` override —
+      abandoning over-deadline requests with their partial output intact
+      (including requests still mid-prefill that never emitted a token);
+    * tracks per-request latency on the session's virtual work clock
+      (submit→first-token, inter-emission gaps) and reports p50/p99 TTFT
+      and per-token latency in :meth:`stats`;
     * feeds wall-clock step times to a
       :class:`~repro.runtime.fault_tolerance.StragglerMonitor`;
     * on :class:`~repro.runtime.kv_cache.OutOfPagesError` suspends — not
@@ -1626,6 +1936,8 @@ class ServeSupervisor:
         max_steps: int | None = None,
         backoff_base: int = 1,
         backoff_cap: int = 16,
+        deadline_guard: int = 2,
+        arrival_unit: str = "steps",
     ):
         from repro.runtime.fault_tolerance import StragglerMonitor
 
@@ -1646,8 +1958,32 @@ class ServeSupervisor:
         self.max_steps = max_steps
         self.backoff_base = max(1, int(backoff_base))
         self.backoff_cap = max(self.backoff_base, int(backoff_cap))
+        if deadline_guard < 0:
+            raise ValueError(
+                f"deadline_guard must be >= 0 steps, got {deadline_guard}"
+            )
+        self.deadline_guard = int(deadline_guard)
+        if arrival_unit not in ("steps", "work_units"):
+            raise ValueError(
+                f"arrival_unit={arrival_unit!r} is not a clock; pick "
+                "'steps' (supervisor loop iterations) or 'work_units' "
+                "(the session's virtual work clock — a synchronous prefill "
+                "visibly delays later arrivals, like wall time would)"
+            )
+        self.arrival_unit = arrival_unit
+        # Idle-time skew for the work-unit arrival clock: waiting for a
+        # future arrival does no session work, so idle ticks advance this
+        # instead (wall time passes even when the accelerator is idle).
+        self._clock_skew = 0
         self.straggler = StragglerMonitor()
         self._submitted: list[list[int]] = []
+        # Per-submission SLA metadata: priority class (higher = more
+        # urgent), per-request deadline override, arrival step.
+        self._meta: list[dict] = []
+        # Per-submission latency record on the session's virtual work
+        # clock (``work_units``): submit/admit/first-token marks + the
+        # inter-emission gaps that feed the per-token percentiles.
+        self._lat: list[dict] = []
         self._queue: list[list[int]] = []  # [sub_idx, not_before, backoff]
         self._live: dict[int, dict] = {}  # rid -> idx/remaining/admitted
         self._results: dict[int, list[int]] = {}
@@ -1667,12 +2003,80 @@ class ServeSupervisor:
         self.faults_skipped = 0
         self.events: list[str] = []
 
-    def submit(self, prompt_tokens) -> int:
-        """Queue a prompt; returns its submission index (the results key)."""
+    def submit(
+        self,
+        prompt_tokens,
+        *,
+        priority: int = 0,
+        deadline: int | None = None,
+        arrival: int = 0,
+    ) -> int:
+        """Queue a prompt; returns its submission index (the results key).
+
+        ``priority`` is the request's class (higher admits first),
+        ``deadline`` overrides the supervisor-wide deadline for this
+        request (steps since admission), and ``arrival`` is the step the
+        request enters the queue — pre-loading a whole traffic trace with
+        staggered arrivals keeps multi-tenant runs deterministic.
+        """
+        if deadline is not None and deadline < 1:
+            raise ValueError(f"deadline must be >= 1 steps, got {deadline}")
+        if arrival < 0:
+            raise ValueError(f"arrival step must be >= 0, got {arrival}")
         idx = len(self._submitted)
         self._submitted.append(list(map(int, prompt_tokens)))
+        self._meta.append(
+            {
+                "priority": int(priority),
+                "deadline": None if deadline is None else int(deadline),
+                "arrival": int(arrival),
+            }
+        )
+        self._lat.append(
+            {
+                "submit_vt": None,
+                "submit_step": None,
+                "admit_vt": None,
+                "admit_step": None,
+                "first_vt": None,
+                "first_step": None,
+                "last_vt": None,
+                "gaps": [],
+            }
+        )
         self._queue.append([idx, 0, self.backoff_base])
         return idx
+
+    def _vt(self) -> int:
+        """The session's virtual work clock (decode launches + prefill
+        chunks) — the deterministic latency proxy all records share."""
+        return int(getattr(self.sess, "work_units", 0))
+
+    def _now(self, step: int) -> int:
+        """The arrival clock: supervisor steps, or the virtual work clock
+        (+ idle skew) when ``arrival_unit="work_units"``."""
+        if self.arrival_unit == "steps":
+            return step
+        return self._vt() + self._clock_skew
+
+    def _lat_clock(self) -> int:
+        """The clock latency marks are stamped on: the raw virtual work
+        clock, plus idle skew when arrivals ride the work-unit clock (so
+        marks and arrivals stay comparable)."""
+        vt = self._vt()
+        return vt if self.arrival_unit == "steps" else vt + self._clock_skew
+
+    def _effective_deadline(self, info: dict) -> int | None:
+        ddl = info.get("deadline")
+        return self.deadline if ddl is None else ddl
+
+    def _slack(self, rid: int, step: int) -> float:
+        """Steps until ``rid``'s deadline expires (inf without one)."""
+        info = self._live[rid]
+        ddl = self._effective_deadline(info)
+        if ddl is None:
+            return float("inf")
+        return (info["admitted"] + ddl) - step
 
     # -- the loop -------------------------------------------------------- #
     def run(self) -> dict[int, list[int]]:
@@ -1733,17 +2137,31 @@ class ServeSupervisor:
                 info = self._live[rid]
                 if rid in before:
                     emitted = len(sess.outputs[rid]) - before[rid]
-                    self.tokens_out += emitted
-                    info["remaining"] -= emitted
+                    if emitted:
+                        self.tokens_out += emitted
+                        info["remaining"] -= emitted
+                        lat = self._lat[info["idx"]]
+                        vt = self._lat_clock()
+                        if lat["first_vt"] is None:
+                            lat["first_vt"] = vt
+                            lat["first_step"] = step
+                        else:
+                            lat["gaps"].append(vt - lat["last_vt"])
+                        if emitted > 1:
+                            # A fused speculative step lands its extra
+                            # accepted tokens at the same clock.
+                            lat["gaps"].extend([0] * (emitted - 1))
+                        lat["last_vt"] = vt
                     if info["remaining"] <= 0:
                         self._results[info["idx"]] = sess.finish(rid)
                         self.completed += 1
                         del self._live[rid]
                         continue
-                if (
-                    self.deadline is not None
-                    and step - info["admitted"] >= self.deadline
-                ):
+                ddl = self._effective_deadline(info)
+                if ddl is not None and step - info["admitted"] >= ddl:
+                    # Steps count against the deadline whether or not the
+                    # request emitted — a prompt still mid-prefill under a
+                    # tiny budget can expire with zero tokens out.
                     self._abandon(rid)
             if oom:
                 # Retained prefix pages are the cheapest thing to give
@@ -1776,9 +2194,31 @@ class ServeSupervisor:
         self._ballast.clear()
         return dict(self._results)
 
+    def latency_records(self) -> list[dict]:
+        """Per-submission latency records (virtual-clock marks + gaps)."""
+        return [dict(r, gaps=list(r["gaps"])) for r in self._lat]
+
     def stats(self) -> dict:
-        """Supervision counters + the session's suspend/replay work."""
+        """Supervision counters + the session's suspend/replay work +
+        latency percentiles on the virtual work clock.
+
+        ``ttft_units_*`` is submit→first-token in work units (decode
+        launches + prefill chunks — the deterministic step-count latency
+        proxy); ``tpot_units_*`` are the inter-emission gaps on the same
+        clock.  Percentiles are nearest-rank (:func:`latency_percentile`).
+        """
         work = self.sess.work_stats()
+        ttft = [
+            r["first_vt"] - r["submit_vt"]
+            for r in self._lat
+            if r["first_vt"] is not None and r["submit_vt"] is not None
+        ]
+        ttft_steps = [
+            r["first_step"] - r["submit_step"]
+            for r in self._lat
+            if r["first_step"] is not None and r["submit_step"] is not None
+        ]
+        gaps = [g for r in self._lat for g in r["gaps"]]
         return {
             "steps": self.steps,
             "completed": self.completed,
@@ -1794,27 +2234,89 @@ class ServeSupervisor:
             "resumes": work.get("resumes", 0),
             "replay_prefill_tokens": work.get("replay_prefill_tokens", 0),
             "replay_mismatches": work.get("replay_mismatches", 0),
+            "work_units": self._vt(),
+            "prefill_chunks": work.get("prefill_chunks", 0),
+            "prefill_stall_steps": work.get("prefill_stall_steps", 0),
+            "first_tokens": len(ttft),
+            "ttft_units_p50": latency_percentile(ttft, 50),
+            "ttft_units_p99": latency_percentile(ttft, 99),
+            "ttft_steps_p50": latency_percentile(ttft_steps, 50),
+            "ttft_steps_p99": latency_percentile(ttft_steps, 99),
+            "tpot_units_p50": latency_percentile(gaps, 50),
+            "tpot_units_p99": latency_percentile(gaps, 99),
         }
 
     # -- internals ------------------------------------------------------- #
     def _admit(self, step: int, force: bool = False) -> bool:
+        from repro.kernels.decode_schedule import admission_order
+
         admitted = False
-        while self._queue:
-            item = self._queue[0]
+        now = self._now(step)
+        arrived = [
+            it for it in self._queue if self._meta[it[0]]["arrival"] <= now
+        ]
+        # Stamp queue-entry time once, before any admission work this
+        # step: TTFT starts when the request arrives, not when it admits.
+        # On the work-unit clock the arrival itself is the queue-entry
+        # mark — a request that arrived mid-way through a long synchronous
+        # prefill has been waiting since then, invisibly to the step loop.
+        for it in arrived:
+            lat = self._lat[it[0]]
+            if lat["submit_vt"] is None:
+                lat["submit_vt"] = (
+                    self._lat_clock()
+                    if self.arrival_unit == "steps"
+                    else self._meta[it[0]]["arrival"]
+                )
+                lat["submit_step"] = step
+        order = admission_order(
+            (
+                it[0],
+                self._meta[it[0]]["priority"],
+                # Queued slack is the deadline window itself (admission
+                # has not started the clock): tighter deadlines first.
+                self._meta[it[0]]["deadline"]
+                if self._meta[it[0]]["deadline"] is not None
+                else self.deadline,
+            )
+            for it in arrived
+        )
+        by_idx = {it[0]: it for it in arrived}
+        for idx in order:
+            item = by_idx[idx]
             if not force and item[1] > step:
-                break
-            rid = self.sess.add_request(self._submitted[item[0]])
+                continue  # backing off — skip ahead to later submissions
+            rid = self.sess.add_request(self._submitted[idx])
             if rid is None:
                 item[1] = step + item[2]
                 item[2] = min(item[2] * 2, self.backoff_cap)
                 self.admission_retries += 1
-                break
-            self._queue.pop(0)
+                continue  # skip-ahead: a later queued prompt may still fit
+            self._queue.remove(item)
+            meta = self._meta[idx]
             self._live[rid] = {
-                "idx": item[0],
-                "remaining": self.gen_len,
+                "idx": idx,
+                # Under budgeted interleaving the first token arrives as a
+                # later step's emission delta; synchronous admission
+                # emitted it just now (the delta loop never sees it) —
+                # either way the request owes gen_len tokens beyond its
+                # first.
+                "remaining": self.gen_len
+                + (0 if self.sess.outputs[rid] else 1),
                 "admitted": step,
+                "priority": meta["priority"],
+                "deadline": meta["deadline"],
             }
+            lat = self._lat[idx]
+            lat["admit_vt"] = self._lat_clock()
+            lat["admit_step"] = step
+            if self.sess.outputs[rid]:
+                # Synchronous prefill emitted the first token inside
+                # add_request: stamp it at the post-prefill clock (the
+                # prompt's own chunks are part of its TTFT).
+                lat["first_vt"] = self._lat_clock()
+                lat["first_step"] = step
+                lat["last_vt"] = lat["first_vt"]
             admitted = True
             force = False
         return admitted
@@ -1856,19 +2358,35 @@ class ServeSupervisor:
                 "pages"
             )
         if self._queue:
+            arrived = [
+                it
+                for it in self._queue
+                if self._meta[it[0]]["arrival"] <= self._now(step)
+            ]
+            if not arrived:
+                # Stream gap: the next arrival is later.  Idle waiting does
+                # no session work, so the work-unit arrival clock advances
+                # via skew (wall time passes on an idle accelerator).
+                self._clock_skew += 1
+                self.steps += 1
+                return
             if self._admit(step, force=True):
                 return  # same step re-runs with live requests
             raise RuntimeError(
-                f"request of {len(self._submitted[self._queue[0][0]])} "
+                f"request of {len(self._submitted[arrived[0][0]])} "
                 "tokens cannot be admitted even with an idle session — "
                 "grow the pool or truncate the prompt"
             )
         del sess  # loop condition handles the all-done case
 
     def _suspend_victim(self, steppable: list[int]) -> None:
-        # Pool exhausted by decode-time growth: recoverably evict the
-        # most-complete request on the fullest pool (most pages back for
-        # one suspension, finishing soonest once resumed).
+        # Pool exhausted by decode-time growth: recoverably evict from the
+        # fullest pool by SLA — lowest priority class first, then most
+        # deadline slack, then most-complete (most pages back for one
+        # suspension, finishing soonest once resumed).  A request within
+        # ``deadline_guard`` steps of its deadline is never evicted while
+        # any other candidate exists: suspension costs a replay it cannot
+        # afford.
         sess = self.sess
         if hasattr(sess, "shards"):
             def free(r):
@@ -1876,9 +2394,21 @@ class ServeSupervisor:
         else:
             def free(r):
                 return sess.cache.num_free_pages
+        step = self.steps
+        candidates = [
+            r
+            for r in steppable
+            if self._slack(r, step) > self.deadline_guard
+        ] or steppable
         victim = max(
-            steppable,
-            key=lambda r: (-free(r), len(sess.outputs[r]), -r),
+            candidates,
+            key=lambda r: (
+                -free(r),
+                -self._live[r]["priority"],
+                self._slack(r, step),
+                len(sess.outputs[r]),
+                -r,
+            ),
         )
         sess.suspend(victim)
         hold = self._resume_hold.setdefault(victim, [0, self.backoff_base])
